@@ -1,0 +1,67 @@
+"""Ablation (beyond-paper): the CIM tile width alpha.
+
+The paper fixes alpha=16 (two 8-partition macros). On TPU the natural tile
+is 128 (MXU lanes). This ablation asks: at fixed pruning target, how do
+sparsity-at-tile-granularity, accuracy, and index storage move as alpha
+grows? Run standalone (not part of the default benchmark set):
+
+  PYTHONPATH=src python -m benchmarks.ablation_alpha
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import eval_acc, train_small_vgg
+from repro.configs.vgg16_cifar import cim_config
+from repro.core import sparsity as S
+from repro.models import cnn
+
+
+def run(steps=60):
+    rows = []
+    for alpha in [4, 8, 16, 32]:
+        cim = cim_config(w_bits=4, a_bits=4, alpha=alpha, n=alpha,
+                         lambda_g=2e-3)
+        params, state, _, _ = train_small_vgg(cim, steps=steps)
+        cim_p = dataclasses.replace(
+            cim, sparsity=dataclasses.replace(cim.sparsity,
+                                              target_sparsity=0.7))
+        pruned = cnn.prune_all(params, cim_p)
+        pruned, state, _, _ = train_small_vgg(cim_p, steps=20,
+                                              params=pruned, state=state)
+        acc = eval_acc(pruned, state, cim_p)
+        # measure skippable fraction at BOTH the trained granularity and
+        # the paper's 16x16 macro granularity
+        z_own, z_16, idx_bits = [], [], 0
+        for p in cnn.iter_conv_params(pruned):
+            if "mask" not in p:
+                continue
+            kh, kw, ci, co = p["mask"].shape
+            m2 = p["mask"].reshape(kh * kw, ci, co)
+            z_own.append(float(jnp.mean(jax.vmap(
+                lambda m: S.zero_groupset_proportion(m, alpha, alpha))(m2))))
+            z_16.append(float(jnp.mean(jax.vmap(
+                lambda m: S.zero_groupset_proportion(m, 16, 16))(m2))))
+            for i in range(kh * kw):
+                idx_bits += int(S.index_storage_bits(m2[i], alpha, alpha))
+        rows.append({
+            "name": f"ablation_alpha{alpha}",
+            "accuracy": round(acc, 4),
+            "tile_sparsity_at_alpha": round(float(np.mean(z_own)), 4),
+            "sparsity_at_macro16": round(float(np.mean(z_16)), 4),
+            "index_kb": round(idx_bits / 1024, 3),
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Shared helpers for the paper-table benchmarks (CPU-budget scale)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vgg16_cifar import SMALL_PLAN, cim_config
+from repro.data import ImagePipeline
+from repro.models import cnn
+
+
+def train_small_vgg(cim, steps=80, lr=0.05, n_classes=4, hw=16, batch=16,
+                    seed=0, params=None, state=None, reg=True):
+    """Train the small VGG on synthetic CIFAR-like data; returns
+    (params, state, final_acc, losses)."""
+    if params is None:
+        params, state = cnn.vgg_init(jax.random.PRNGKey(seed), cim, SMALL_PLAN,
+                                     n_classes=n_classes)
+    pipe = ImagePipeline(n_classes=n_classes, batch=batch, hw=hw, seed=seed)
+
+    def loss_fn(p, st, batch):
+        logits, st2 = cnn.vgg_apply(p, st, batch["images"], cim, SMALL_PLAN,
+                                    train=True)
+        ce = -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(logits), batch["labels"][:, None], 1))
+        total = ce + (cnn.regularization(p, cim) if reg else 0.0)
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+        return total, (ce, acc, st2)
+
+    @jax.jit
+    def step(p, st, batch):
+        (_, (ce, acc, st2)), g = jax.value_and_grad(loss_fn, has_aux=True)(p, st, batch)
+        p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+        return p, st2, ce, acc
+
+    losses, accs = [], []
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        params, state, ce, acc = step(params, state, b)
+        losses.append(float(ce))
+        accs.append(float(acc))
+    return params, state, float(np.mean(accs[-10:])), losses
+
+
+def eval_acc(params, state, cim, n_classes=4, hw=16, batches=8, seed=999):
+    pipe = ImagePipeline(n_classes=n_classes, batch=32, hw=hw, seed=seed)
+    f = jax.jit(lambda p, st, x: cnn.vgg_apply(p, st, x, cim, SMALL_PLAN,
+                                               train=False)[0])
+    correct = total = 0
+    for _ in range(batches):
+        b = pipe.next_batch()
+        logits = f(params, state, jnp.asarray(b["images"]))
+        correct += int(np.sum(np.argmax(np.asarray(logits), -1) == b["labels"]))
+        total += b["labels"].size
+    return correct / total
+
+
+def timeit(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us

@@ -1,0 +1,33 @@
+"""Fig. 11 - feature-map SRAM access per layer, baseline vs MARS (the
+deeper/sparser the layer, the bigger the reduction)."""
+from __future__ import annotations
+
+from repro.core import perf_model as PM
+
+
+def run():
+    rows = []
+    for name, layers in [("vgg16", PM.vgg16_cifar_layers()),
+                         ("resnet18", PM.resnet18_cifar_layers())]:
+        perf = PM.evaluate_network(layers, 8, 4)
+        worst = max(p.fm_reduction for p in perf)
+        for p in perf:
+            rows.append({
+                "name": f"fig11_{name}_{p.name}",
+                "fm_access_dense": int(p.fm_access_dense),
+                "fm_access_mars": int(p.fm_access_mars),
+                "reduction_x": round(p.fm_reduction, 1),
+            })
+        rows.append({"name": f"fig11_{name}_max_reduction",
+                     "fm_access_dense": "", "fm_access_mars": "",
+                     "reduction_x": round(worst, 1)})
+    return rows
+
+
+def main():
+    for r in run():
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

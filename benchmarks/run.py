@@ -1,0 +1,43 @@
+"""Benchmark driver: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+MODULES = [
+    "table1_perf",
+    "table4_memory",
+    "fig10_speedup",
+    "fig11_access",
+    "kernel_bench",
+    "table3_quant",
+    "table2_compression",
+    "fig12_n_sweep",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        if only and modname not in only:
+            continue
+        t0 = time.time()
+        mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{modname},ERROR,{str(e)[:120]}")
+            continue
+        dt = (time.time() - t0) * 1e6
+        for r in rows:
+            name = r.pop("name")
+            us = r.pop("us_per_call_interp", round(dt / max(len(rows), 1), 1))
+            derived = ";".join(f"{k}={v}" for k, v in r.items())
+            print(f"{name},{us},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Table I - MARS accelerator performance (analytic model, like the paper's
+own 'estimated value' methodology referencing [18]'s measured macro)."""
+from __future__ import annotations
+
+from repro.core import perf_model as PM
+
+PAPER = {  # (net, dataset, wbits, abits) -> (fps, gops, tops_w)
+    ("vgg16", "c10", 8, 4): (714, 445, 52.3),
+    ("vgg16", "c10", 8, 8): (540, 336, 29.7),
+    ("resnet18", "c10", 8, 4): (711, 778, 88.2),
+    ("resnet18", "c10", 8, 8): (403, 441, 37.6),
+}
+
+
+def run():
+    rows = []
+    for net, layers_fn in [("vgg16", PM.vgg16_cifar_layers),
+                           ("resnet18", PM.resnet18_cifar_layers)]:
+        for (w, a) in [(8, 4), (8, 8)]:
+            perf = PM.summarize(layers_fn(), w, a)
+            p = PAPER.get((net, "c10", w, a), (None, None, None))
+            rows.append({
+                "name": f"table1_{net}_w{w}a{a}",
+                "fps": round(perf.fps, 1),
+                "fps_paper": p[0],
+                "speedup_vs_dense": round(perf.speedup, 2),
+                "avg_gops": round(perf.avg_gops, 1),
+                "gops_paper": p[1],
+                "macro_tops_w": round(perf.macro_tops_w, 1),
+                "tops_w_paper": p[2],
+                "peak_tops_w": round(perf.peak_macro_tops_w, 1),
+            })
+    return rows
+
+
+def main():
+    for r in run():
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

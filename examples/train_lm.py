@@ -1,0 +1,97 @@
+"""End-to-end LM training driver (deliverable b): trains a transformer with
+the MARS technique enabled (w8a8 QAT + CIM group lasso on every projection)
+for a few hundred steps with checkpointing, then deploys one layer through
+the block-sparse kernel.
+
+Default is a ~5M-param model sized for this CPU container; --big selects a
+updates~100M-param config (same code path - budget permitting).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import TokenPipeline
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.train import (OptConfig, TrainConfig, checkpoint,
+                         init_train_state, make_train_step)
+
+SMALL = ModelConfig(
+    name="lm-5m", family="dense", n_layers=4, d_model=256, n_heads=8,
+    n_kv_heads=4, d_ff=1024, vocab=2048, head_dim=32, dtype="float32",
+    remat="none", cim_mode="qat", w_bits=8, a_bits=8, lambda_g=1e-5,
+    cim_alpha=16, cim_n=16,
+)
+BIG = dataclasses.replace(
+    SMALL, name="lm-100m", n_layers=12, d_model=768, n_heads=12,
+    n_kv_heads=4, d_ff=3072, vocab=8192, head_dim=64,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--big", action="store_true", help="~100M params")
+    ap.add_argument("--ckpt-dir", default="/tmp/train_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = BIG if args.big else SMALL
+    fns = registry.model_fns(cfg)
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(
+        jax.eval_shape(lambda: fns.init_params(cfg, jax.random.PRNGKey(0)))))
+    print(f"model {cfg.name}: {n_params/1e6:.1f}M params, MARS QAT "
+          f"w{cfg.w_bits}a{cfg.a_bits} + group lasso (alpha={cfg.cim_alpha})")
+
+    tcfg = TrainConfig(opt=OptConfig(lr=3e-3, warmup_steps=20,
+                                     total_steps=args.steps),
+                       ckpt_dir=args.ckpt_dir, ckpt_every=100)
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=args.batch, seq_len=args.seq)
+    start = 0
+    if args.resume and checkpoint.latest_step(args.ckpt_dir) is not None:
+        state, man = checkpoint.restore(args.ckpt_dir, state)
+        pipe.restore(man["extra"]["pipe"])
+        start = man["step"]
+        print(f"resumed at step {start}")
+
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    t0 = time.time()
+    losses = []
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        if (i + 1) % 25 == 0:
+            tps = args.batch * args.seq * (i + 1 - start) / (time.time() - t0)
+            print(f"step {i+1}: loss={losses[-1]:.4f} ({tps:.0f} tok/s)")
+        if (i + 1) % tcfg.ckpt_every == 0:
+            checkpoint.save(tcfg.ckpt_dir, i + 1, state,
+                            extra={"pipe": pipe.state()})
+    print(f"loss {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f} "
+          f"in {time.time()-t0:.0f}s")
+
+    # deploy one trained projection through the CIM kernel path
+    from repro.core import quant as Q, sparsity as S
+    from repro.kernels import ops
+    w = np.asarray(state["params"]["layers"]["w_up"][0])
+    mask = np.asarray(S.prune_mask_2d(jnp.asarray(w), 16, 16, 0.5))
+    wq = np.asarray(Q.mars_weight_quant(jnp.asarray(w * mask), cfg.w_bits, 16))
+    packed = ops.pack_for_kernel(wq, bits=cfg.w_bits, bk=16, bn=16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, w.shape[0]))
+    err = float(jnp.max(jnp.abs(ops.bsr_matmul(x, packed, bm=8) - x @ jnp.asarray(wq))))
+    print(f"deployed layer-0 w_up via BSR kernel: density={packed['density']:.2f}, "
+          f"max|diff| vs dense = {err:.2e}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: MARS (multi-macro SRAM-CIM accelerator + co-designed compression)
+reproduced as a production-grade JAX training/serving framework."""
+
+__version__ = "0.1.0"

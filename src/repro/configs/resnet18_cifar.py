@@ -1,0 +1,15 @@
+"""ResNet18 on CIFAR - the paper's own test network (§V)."""
+from repro.core.cim_layer import CIMConfig
+from repro.core.quant import QuantConfig
+from repro.core.sparsity import SparsityConfig
+from repro.models.cnn import RESNET18_STAGES, RESNET_SMALL_STAGES
+
+FULL_STAGES = RESNET18_STAGES
+SMALL_STAGES = RESNET_SMALL_STAGES
+
+def cim_config(w_bits=8, a_bits=4, alpha=16, n=16, lambda_g=1e-4, mode="qat"):
+    return CIMConfig(
+        quant=QuantConfig(w_bits=w_bits, a_bits=a_bits, group_size=alpha),
+        sparsity=SparsityConfig(alpha=alpha, n=n, lambda_g=lambda_g),
+        mode=mode,
+    )

@@ -1,0 +1,15 @@
+"""yi-6b - exact assigned config [arXiv:2403.04652; llama-arch GQA]."""
+from repro.models.config import ModelConfig
+
+
+CONFIG = ModelConfig(
+    name="yi-6b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4, d_ff=11008,
+    vocab=64000, head_dim=128, rope_theta=5e6,
+)
+
+SMOKE = ModelConfig(
+    name="yi-6b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab=256, head_dim=16, remat="none",
+)

@@ -1,0 +1,5 @@
+"""MARS core: CIM-aware compression + accelerator model (the paper's contribution)."""
+from . import cim_layer, mapping, perf_model, quant, sparsity  # noqa: F401
+from .cim_layer import CIMConfig, DENSE  # noqa: F401
+from .quant import QuantConfig  # noqa: F401
+from .sparsity import SparsityConfig  # noqa: F401

@@ -1,0 +1,220 @@
+"""CIMLinear / CIMConv2D - MARS's technique as a composable JAX module.
+
+Functional, pytree-based (no flax): ``init`` returns a params dict,
+``apply`` is a pure function usable under jit/grad/pjit/scan. Three
+execution modes, selected by CIMConfig:
+
+  * dense  - plain float matmul/conv (the paper's 32/32 rows).
+  * qat    - quantization-aware training: eq.5 activations, eqs.6-8
+             weights (with BN/RMSNorm fusion), optional pruning mask,
+             group-lasso regularization collected by ``regularizer``.
+  * deploy - weights pre-quantized to int levels and BSR-packed; the
+             Pallas kernels consume the packed form (serving path).
+
+The same module serves the paper's CNNs (CIMConv2D with BN fusion) and the
+LM zoo (CIMLinear on QKV/O, MLP, MoE experts, SSM projections).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quant as Q
+from . import sparsity as S
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    quant: Q.QuantConfig = dataclasses.field(default_factory=Q.QuantConfig)
+    sparsity: S.SparsityConfig = dataclasses.field(default_factory=S.SparsityConfig)
+    mode: str = "dense"  # dense | qat | deploy
+    bn_momentum: float = 0.9
+
+    def with_mode(self, mode: str) -> "CIMConfig":
+        return dataclasses.replace(self, mode=mode)
+
+
+DENSE = CIMConfig(mode="dense")
+
+
+# ---------------------------------------------------------------------------
+# CIMLinear
+# ---------------------------------------------------------------------------
+
+
+def linear_init(key, d_in: int, d_out: int, cfg: CIMConfig = DENSE,
+                dtype=jnp.float32, bias: bool = False) -> dict:
+    scale = 1.0 / (d_in**0.5)
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    if cfg.mode == "qat":
+        p["mask"] = jnp.ones((d_in, d_out), jnp.float32)
+    return p
+
+
+def effective_weight(params: dict, cfg: CIMConfig,
+                     norm_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """The weight actually multiplied: masked, tanh-normalized, scale-fused,
+    quantized (eqs. 6-8). For dense mode it is just params['w']."""
+    w = params["w"]
+    if cfg.mode == "dense":
+        return w
+    if "mask" in params:
+        # masks are structural, never trainable: without stop_gradient the
+        # optimizer would drift them off {0,1} during masked retraining
+        w = w * jax.lax.stop_gradient(params["mask"]).astype(w.dtype)
+    qc = cfg.quant
+    if not qc.enabled and norm_scale is None:
+        return w
+    w_hat = Q.tanh_normalize(w.astype(jnp.float32), qc.group_size)
+    if norm_scale is not None:  # RMSNorm gain folded on the input axis
+        w_hat = Q.fold_input_scale(w_hat, norm_scale.astype(jnp.float32))
+    else:
+        w_hat = jnp.clip(w_hat, -1.0, 1.0)
+    return Q.quantize_weight_symmetric(w_hat, qc.w_bits).astype(w.dtype)
+
+
+def linear_apply(params: dict, x: jnp.ndarray, cfg: CIMConfig = DENSE,
+                 norm_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """y = quant(x) @ quant(w) + b."""
+    if cfg.mode != "dense" and cfg.quant.enabled:
+        x = Q.quantize_activation(x.astype(jnp.float32), cfg.quant.a_bits,
+                                  cfg.quant.a_signed).astype(x.dtype)
+    w = effective_weight(params, cfg, norm_scale)
+    y = x @ w.astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def linear_regularizer(params: dict, cfg: CIMConfig) -> jnp.ndarray:
+    """Group-lasso (eq. 4) + L2 (eq. 1) for this layer's master weight."""
+    sc = cfg.sparsity
+    w = params["w"].astype(jnp.float32)
+    if w.ndim == 3:  # stacked layers under scan
+        r = jnp.sum(jax.vmap(lambda m: S.group_lasso_2d(m, sc.n, sc.alpha))(w))
+    else:
+        r = S.group_lasso_2d(w, sc.n, sc.alpha)
+    total = sc.lambda_g / 2.0 * r
+    if sc.lambda_l2 > 0:
+        total = total + sc.lambda_l2 / 2.0 * jnp.sum(w * w)
+    return total
+
+
+def linear_prune(params: dict, cfg: CIMConfig) -> dict:
+    """Recompute the pruning mask from tile norms (post-regularized weights)."""
+    sc = cfg.sparsity
+    w = params["w"]
+    if w.ndim == 3:
+        mask = jax.vmap(lambda m: S.prune_mask_2d(m, sc.n, sc.alpha, sc.target_sparsity))(w)
+    else:
+        mask = S.prune_mask_2d(w, sc.n, sc.alpha, sc.target_sparsity)
+    out = dict(params)
+    out["mask"] = mask.astype(jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CIMConv2D (NHWC / HWIO) with BN fusion - the paper's CNN building block
+# ---------------------------------------------------------------------------
+
+
+def conv_init(key, kh: int, kw: int, cin: int, cout: int, cfg: CIMConfig = DENSE,
+              dtype=jnp.float32, with_bn: bool = True) -> Tuple[dict, dict]:
+    k1, _ = jax.random.split(key)
+    fan_in = kh * kw * cin
+    params = {"w": jax.random.normal(k1, (kh, kw, cin, cout), dtype) * (2.0 / fan_in) ** 0.5}
+    state = {}
+    if with_bn:
+        params["gamma"] = jnp.ones((cout,), jnp.float32)
+        params["beta"] = jnp.zeros((cout,), jnp.float32)
+        state = {"mean": jnp.zeros((cout,), jnp.float32),
+                 "var": jnp.ones((cout,), jnp.float32)}
+    if cfg.mode == "qat":
+        params["mask"] = jnp.ones((kh, kw, cin, cout), jnp.float32)
+    return params, state
+
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding, dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def conv_apply(params: dict, state: dict, x: jnp.ndarray, cfg: CIMConfig = DENSE,
+               stride: int = 1, padding: str = "SAME",
+               train: bool = False) -> Tuple[jnp.ndarray, dict]:
+    """Forward. Returns (y, new_state). In qat mode the BN scale is fused
+    into the quantized weight (eq. 7) and the remaining BN shift becomes a
+    cheap per-channel bias (APW-block add); EMA stats update in train mode."""
+    w = params["w"]
+    has_bn = "gamma" in params
+    if cfg.mode == "dense":
+        y = _conv(x, w, stride, padding)
+        if has_bn:
+            if train:
+                mean, var = Q.batch_stats(y)
+                state = {
+                    "mean": Q.ema_update(state["mean"], mean, cfg.bn_momentum),
+                    "var": Q.ema_update(state["var"], var, cfg.bn_momentum),
+                }
+            else:
+                mean, var = state["mean"], state["var"]
+            inv = jax.lax.rsqrt(var + cfg.quant.eps)
+            y = (y - mean) * inv * params["gamma"] + params["beta"]
+        return y, state
+
+    # --- qat: eqs. 5-8 ---
+    qc = cfg.quant
+    if "mask" in params:
+        w = w * jax.lax.stop_gradient(params["mask"]).astype(w.dtype)
+    xq = Q.quantize_activation(x.astype(jnp.float32), qc.a_bits, qc.a_signed)
+    kh, kw, cin, cout = w.shape
+    w2d = w.reshape(kh * kw * cin, cout).astype(jnp.float32)
+    w_hat = Q.tanh_normalize(w2d, qc.group_size)
+    if has_bn and qc.bn_fuse:
+        if train:
+            # batch stats of the pre-BN output computed with the normalized
+            # (un-fused) weight; gradient does not flow through the stats.
+            u = _conv(xq, jax.lax.stop_gradient(w_hat).reshape(kh, kw, cin, cout),
+                      stride, padding)
+            mean_b, var_b = Q.batch_stats(u)
+            state = {
+                "mean": Q.ema_update(state["mean"], mean_b, cfg.bn_momentum),
+                "var": Q.ema_update(state["var"], var_b, cfg.bn_momentum),
+            }
+            mean, var = mean_b, var_b
+        else:
+            mean, var = state["mean"], state["var"]
+        w_bar = Q.fuse_bn_scale(w_hat, params["gamma"], var, qc.eps)
+        scale = params["gamma"] * jax.lax.rsqrt(var + qc.eps)
+        bias = params["beta"] - scale * mean
+    else:
+        w_bar = jnp.clip(w_hat, -1.0, 1.0)
+        bias = None
+    w_q = Q.quantize_weight_symmetric(w_bar, qc.w_bits)
+    y = _conv(xq, w_q.reshape(kh, kw, cin, cout), stride, padding)
+    if bias is not None:
+        y = y + bias
+    return y, state
+
+
+def conv_regularizer(params: dict, cfg: CIMConfig) -> jnp.ndarray:
+    sc = cfg.sparsity
+    w = params["w"].astype(jnp.float32)
+    total = sc.lambda_g / 2.0 * S.group_lasso_conv(w, sc.n, sc.alpha)
+    if sc.lambda_l2 > 0:
+        total = total + sc.lambda_l2 / 2.0 * jnp.sum(w * w)
+    return total
+
+
+def conv_prune(params: dict, cfg: CIMConfig) -> dict:
+    sc = cfg.sparsity
+    mask = S.prune_mask_conv(params["w"], sc.n, sc.alpha, sc.target_sparsity)
+    out = dict(params)
+    out["mask"] = mask.astype(jnp.float32)
+    return out

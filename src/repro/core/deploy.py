@@ -1,0 +1,104 @@
+"""Deployment: trained QAT weights -> CIM-packed serving artifacts.
+
+The paper's inference flow (§III): after QAT + pruning, only nonzero
+group-sets are stored (with index codes) and computed. Here the LM
+equivalent: every CIM-mapped projection is quantized to int levels
+(eqs. 6-8), pruned at the TPU tile granularity, and packed for the
+``cim_bsr_matmul`` kernel. ``deployed_matmul`` is the drop-in serving
+replacement for ``cim_matmul``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from . import quant as Q
+from . import sparsity as S
+from .cim_layer import CIMConfig
+
+
+@dataclasses.dataclass
+class DeployedWeight:
+    """One projection packed for the kernel (per layer of a stack)."""
+
+    packed: List[dict]  # one kernel dict per stacked layer
+    d_in: int
+    d_out: int
+    bits: int
+
+    @property
+    def density(self) -> float:
+        return float(np.mean([p["density"] for p in self.packed]))
+
+
+def deploy_weight(w, cim: CIMConfig, bk: int = 128, bn: int = 128,
+                  target_sparsity: Optional[float] = None) -> DeployedWeight:
+    """Quantize + prune + pack a (d_in, d_out) or stacked (L, d_in, d_out)
+    master weight for serving."""
+    w = jnp.asarray(w)
+    stacked = w if w.ndim == 3 else w[None]
+    bits = cim.quant.w_bits
+    ts = (cim.sparsity.target_sparsity if target_sparsity is None
+          else target_sparsity)
+    packed = []
+    for wl in stacked:
+        mask = S.prune_mask_2d(wl, bk, bn, ts)
+        wq = Q.mars_weight_quant(wl * mask, bits, cim.quant.group_size)
+        packed.append(ops.pack_for_kernel(np.asarray(wq), bits=bits,
+                                          bk=bk, bn=bn))
+    return DeployedWeight(packed, stacked.shape[-2], stacked.shape[-1], bits)
+
+
+def deployed_matmul(x: jnp.ndarray, dw: DeployedWeight, layer: int = 0,
+                    a_bits: int = 0, interpret: Optional[bool] = None
+                    ) -> jnp.ndarray:
+    """Serving-path matmul: eq.5 activation quant + BSR kernel.
+
+    x: (..., d_in). The zero blocks dropped at packing are never fetched
+    or multiplied - MARS §III.B on the MXU.
+    """
+    if a_bits:
+        x = Q.quantize_activation(x.astype(jnp.float32), a_bits, signed=True)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, dw.d_in)
+    y = ops.bsr_matmul(x2, dw.packed[layer],
+                       bm=max(8, min(128, x2.shape[0])), interpret=interpret)
+    return y.reshape(*lead, dw.d_out).astype(x.dtype)
+
+
+def reference_matmul(x: jnp.ndarray, w, cim: CIMConfig,
+                     target_sparsity: Optional[float] = None,
+                     bk: int = 128, bn: int = 128) -> jnp.ndarray:
+    """QAT-simulation oracle for deployed_matmul (same quant + mask path,
+    dense math)."""
+    ts = (cim.sparsity.target_sparsity if target_sparsity is None
+          else target_sparsity)
+    mask = S.prune_mask_2d(w, bk, bn, ts)
+    wq = Q.mars_weight_quant(w * mask, cim.quant.w_bits, cim.quant.group_size)
+    xq = Q.quantize_activation(x.astype(jnp.float32), cim.quant.a_bits,
+                               signed=True)
+    return (xq @ wq.astype(jnp.float32)).astype(x.dtype)
+
+
+def deployment_report(deployed: Dict[str, DeployedWeight]) -> dict:
+    """Storage accounting across all deployed projections (Table IV-style)."""
+    total_dense_bits = total_weight_bits = total_index_bits = 0
+    for name, dw in deployed.items():
+        for p in dw.packed:
+            nnz_blocks = int(np.asarray(p["nnz"]).sum())
+            bk, bn = p["blocks"].shape[2], p["blocks"].shape[3]
+            total_weight_bits += nnz_blocks * bk * bn * dw.bits
+            total_index_bits += nnz_blocks * 32  # int32 row index per block
+        total_dense_bits += dw.d_in * dw.d_out * len(dw.packed) * 32
+    return {
+        "dense_Mb": total_dense_bits / 2**20,
+        "weight_Mb": total_weight_bits / 2**20,
+        "index_Kb": total_index_bits / 2**10,
+        "compression_x": total_dense_bits / max(total_weight_bits
+                                                + total_index_bits, 1),
+    }

@@ -1,0 +1,177 @@
+"""MARS quantization algorithms (paper §IV.C, eqs. 5-8) + DoReFa baseline.
+
+Everything is a pure function on jnp arrays so it composes with jit/grad/
+pjit. Straight-through estimators are implemented with stop_gradient.
+
+Paper equations
+---------------
+eq.5  activation:  A_q = round(clamp(A, 0, 1) * (2^bA - 1)) / 2^bA
+eq.6  per-group tanh normalization:  W_hat = tanh(W) / max|tanh(W)| (per group)
+eq.7  BN fusion:  W_bar = clamp(gamma * W_hat / sqrt(var + eps), -1, 1)
+eq.8  symmetric weight quant:  W_q = round(W_bar * (2^{b-1} - 1)) / 2^{b-1}
+      (b=4 -> levels {-7..7}/8, exactly implementable on the 4-bit macro)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Bit-widths and switches for the MARS quantizer.
+
+    w_bits/a_bits of 32 mean "leave in float" (the paper's 32/32 rows).
+    ``groups`` is G in §IV.C step 1 - the number of weight groups determined
+    by how many bit-lines turn on per cycle; tanh normalization (eq. 6) is
+    applied per group along the *input* dimension.
+    """
+
+    w_bits: int = 8
+    a_bits: int = 8
+    group_size: int = 16  # G in §IV.C: BLs on per cycle (alpha of the macro)
+    bn_fuse: bool = True
+    a_signed: bool = False  # LM adaptation: SiLU/GELU activations are signed
+    eps: float = 1e-5
+
+    @property
+    def enabled(self) -> bool:
+        return self.w_bits < 32 or self.a_bits < 32
+
+
+def round_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """round() with a straight-through gradient (identity backward)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def quantize_activation(a: jnp.ndarray, bits: int, signed: bool = False) -> jnp.ndarray:
+    """eq. 5 - clamp to [0,1] then uniform quantization, STE backward.
+
+    ``signed=True`` is the LM adaptation (SiLU/GELU produce negatives):
+    clamp to [-1,1] with symmetric levels, same hardware datapath as eq. 8.
+    """
+    if bits >= 32:
+        return a
+    if signed:
+        qmax = 2.0 ** (bits - 1) - 1.0
+        return round_ste(jnp.clip(a, -1.0, 1.0) * qmax) / (2.0 ** (bits - 1))
+    levels = 2.0**bits - 1.0
+    a = jnp.clip(a, 0.0, 1.0)
+    return round_ste(a * levels) / (2.0**bits)
+
+
+def tanh_normalize(w: jnp.ndarray, group_size: int = 0) -> jnp.ndarray:
+    """eq. 6 - per-group tanh normalization to [-1, 1].
+
+    ``w`` has shape (..., d_in, d_out). Groups are slabs of ``group_size``
+    output columns - the bit-lines that turn on together in one macro cycle
+    (G in §IV.C step 1). group_size=0 normalizes globally.
+    """
+    t = jnp.tanh(w)
+    d_out = w.shape[-1]
+    if group_size <= 0 or d_out % group_size != 0 or d_out == group_size:
+        denom = jnp.max(jnp.abs(t)) + 1e-12
+        return t / denom
+    lead = w.shape[:-1]
+    tg = t.reshape(lead + (d_out // group_size, group_size))
+    axes = tuple(range(len(lead))) + (len(lead) + 1,)
+    denom = jnp.max(jnp.abs(tg), axis=axes, keepdims=True) + 1e-12
+    return (tg / denom).reshape(w.shape)
+
+
+def fuse_bn_scale(
+    w_hat: jnp.ndarray,
+    gamma: Optional[jnp.ndarray],
+    var: Optional[jnp.ndarray],
+    eps: float = 1e-5,
+) -> jnp.ndarray:
+    """eq. 7 - fold the BN scale gamma/sqrt(var+eps) into the weights.
+
+    gamma/var are per-output-channel (last axis of w_hat). Passing None for
+    either skips fusion (e.g. RMSNorm-folded LM layers fold their scale on
+    the *input* axis instead - see fold_input_scale).
+    """
+    if gamma is None or var is None:
+        return jnp.clip(w_hat, -1.0, 1.0)
+    scale = gamma / jnp.sqrt(var + eps)
+    return jnp.clip(w_hat * scale, -1.0, 1.0)
+
+
+def fold_input_scale(w_hat: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Beyond-paper adaptation: fold an RMSNorm/LayerNorm gain (per input
+    feature) into the weight the same way eq. 7 folds BN - so LM serving
+    needs no separate high-precision elementwise multiply either."""
+    return jnp.clip(w_hat * scale[..., :, None], -1.0, 1.0)
+
+
+def quantize_weight_symmetric(w_bar: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """eq. 8 - symmetric quantization with STE. b=4 -> {-7..7}/8."""
+    if bits >= 32:
+        return w_bar
+    qmax = 2.0 ** (bits - 1) - 1.0
+    return round_ste(w_bar * qmax) / (2.0 ** (bits - 1))
+
+
+def weight_int_levels(w_q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Map eq.8 output back to the integer codes the macro actually stores."""
+    return jnp.round(w_q * (2.0 ** (bits - 1))).astype(jnp.int8)
+
+
+def mars_weight_quant(
+    w: jnp.ndarray,
+    bits: int,
+    group_size: int = 16,
+    gamma: Optional[jnp.ndarray] = None,
+    var: Optional[jnp.ndarray] = None,
+    eps: float = 1e-5,
+) -> jnp.ndarray:
+    """Full MARS weight pipeline: eq.6 -> eq.7 -> eq.8."""
+    if bits >= 32 and gamma is None:
+        return w
+    w_hat = tanh_normalize(w, group_size)
+    w_bar = fuse_bn_scale(w_hat, gamma, var, eps)
+    return quantize_weight_symmetric(w_bar, bits)
+
+
+# ---------------------------------------------------------------------------
+# DoReFa baseline (the paper's Table III comparison; ref [25])
+# ---------------------------------------------------------------------------
+
+
+def dorefa_quantize_weight(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """DoReFa-Net weight quantizer: w_q = 2*Q_k(tanh(w)/(2 max|tanh|) + 0.5) - 1."""
+    if bits >= 32:
+        return w
+    t = jnp.tanh(w)
+    t = t / (2.0 * jnp.max(jnp.abs(t)) + 1e-12) + 0.5
+    levels = 2.0**bits - 1.0
+    q = round_ste(t * levels) / levels
+    return 2.0 * q - 1.0
+
+
+def dorefa_quantize_activation(a: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """DoReFa activation quantizer: Q_k(clamp(a, 0, 1))."""
+    if bits >= 32:
+        return a
+    levels = 2.0**bits - 1.0
+    return round_ste(jnp.clip(a, 0.0, 1.0) * levels) / levels
+
+
+# ---------------------------------------------------------------------------
+# Batch-norm statistics helpers (EMA update used by eq. 7 during QAT)
+# ---------------------------------------------------------------------------
+
+
+def ema_update(old: jnp.ndarray, batch: jnp.ndarray, momentum: float = 0.9):
+    return momentum * old + (1.0 - momentum) * batch
+
+
+def batch_stats(pre_activation: jnp.ndarray):
+    """Per-channel (last axis) mean/var of the conv/linear output."""
+    axes = tuple(range(pre_activation.ndim - 1))
+    mean = jnp.mean(pre_activation, axis=axes)
+    var = jnp.var(pre_activation, axis=axes)
+    return mean, var

@@ -1,0 +1,171 @@
+"""MARS CIM-aware structured sparsity (paper §IV.A-B, eqs. 1-4).
+
+The macro constraint: a group-set (16 weight-groups at the same relative
+position across alpha=16 kernels) can be skipped only when ALL of its weights
+are zero. Eq. 3 group-lassos [alpha output filters] per (channel, spatial)
+position; eq. 4 additionally ties N consecutive channels so one index code
+serves N group-sets (index-aware pruning).
+
+For 2-D weights (d_in, d_out) - every linear layer in the LM zoo - the same
+structure is an (N x alpha) tile: N input features x alpha output features.
+Conv weights are HWIO and are handled by flattening (H, W) into positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    alpha: int = 16  # output filters tied per group-set (BLs on per cycle)
+    n: int = 16  # channels sharing one index code (eq. 4)
+    lambda_g: float = 1e-4  # group-lasso strength
+    lambda_l2: float = 0.0  # non-structured R(w) in eq. 1/2
+    target_sparsity: float = 0.95  # pruning threshold selection
+
+
+def _pad_to_multiple(w: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = w.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return w
+    pads = [(0, 0)] * w.ndim
+    pads[axis] = (0, pad)
+    return jnp.pad(w, pads)
+
+
+def tile_view(w2d: jnp.ndarray, n: int, alpha: int) -> jnp.ndarray:
+    """(d_in, d_out) -> (d_in/n, d_out/alpha, n, alpha) tile view (padded)."""
+    w2d = _pad_to_multiple(_pad_to_multiple(w2d, 0, n), 1, alpha)
+    di, do = w2d.shape
+    return w2d.reshape(di // n, n, do // alpha, alpha).transpose(0, 2, 1, 3)
+
+
+def tile_norms(w2d: jnp.ndarray, n: int, alpha: int) -> jnp.ndarray:
+    """L2 norm of every (n x alpha) tile -> (d_in/n, d_out/alpha)."""
+    t = tile_view(w2d, n, alpha)
+    return jnp.sqrt(jnp.sum(t * t, axis=(-2, -1)) + 1e-24)
+
+
+def group_lasso_2d(w2d: jnp.ndarray, n: int, alpha: int) -> jnp.ndarray:
+    """eq. 4 regularizer for a 2-D weight: sum of tile L2 norms.
+
+    With n=1 this degenerates to eq. 3 (no channel sharing).
+    """
+    return jnp.sum(tile_norms(w2d, n, alpha))
+
+
+def group_lasso_conv(w_hwio: jnp.ndarray, n: int, alpha: int) -> jnp.ndarray:
+    """eq. 4 for a conv weight (H, W, I, O): groups are (N channels x alpha
+    filters) at each spatial position (m, k)."""
+    h, w, i, o = w_hwio.shape
+    flat = w_hwio.reshape(h * w, i, o)
+    norms = jax.vmap(lambda m: tile_norms(m, n, alpha))(flat)
+    return jnp.sum(norms)
+
+
+def regularization(params_tree, cfg: SparsityConfig) -> jnp.ndarray:
+    """E(w) regularization terms of eq. 2 over a pytree of CIM weights.
+
+    Leaves named by convention: any array with ndim==2 is treated as linear
+    (d_in, d_out); ndim==4 as conv HWIO. Other leaves are skipped.
+    """
+    total = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree.leaves(params_tree):
+        if not isinstance(leaf, jnp.ndarray) or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        lf = leaf.astype(jnp.float32)
+        if leaf.ndim == 2:
+            total = total + cfg.lambda_g / 2.0 * group_lasso_2d(lf, cfg.n, cfg.alpha)
+        elif leaf.ndim == 4:
+            total = total + cfg.lambda_g / 2.0 * group_lasso_conv(lf, cfg.n, cfg.alpha)
+        elif leaf.ndim == 3:  # stacked per-layer weights (scan over layers)
+            total = total + cfg.lambda_g / 2.0 * jnp.sum(
+                jax.vmap(lambda m: jnp.sum(tile_norms(m, cfg.n, cfg.alpha)))(lf)
+            )
+        if cfg.lambda_l2 > 0.0:
+            total = total + cfg.lambda_l2 / 2.0 * jnp.sum(lf * lf)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Pruning: tile-norm thresholding to the CIM-skippable structure
+# ---------------------------------------------------------------------------
+
+
+def prune_mask_2d(
+    w2d: jnp.ndarray, n: int, alpha: int, target_sparsity: float
+) -> jnp.ndarray:
+    """Binary mask (same shape as w2d, un-padded) zeroing the lowest-norm
+    (n x alpha) tiles until >= target_sparsity of tiles are zero."""
+    norms = tile_norms(w2d, n, alpha)
+    k = norms.size
+    thresh = jnp.quantile(norms.reshape(-1), target_sparsity)
+    keep = norms > thresh  # (di/n, do/alpha)
+    mask = jnp.repeat(jnp.repeat(keep, n, axis=0), alpha, axis=1)
+    return mask[: w2d.shape[0], : w2d.shape[1]].astype(w2d.dtype)
+
+
+def prune_mask_conv(
+    w_hwio: jnp.ndarray, n: int, alpha: int, target_sparsity: float
+) -> jnp.ndarray:
+    """Conv version: global threshold over all (position, tile) norms."""
+    h, w, i, o = w_hwio.shape
+    flat = w_hwio.reshape(h * w, i, o)
+    norms = jax.vmap(lambda m: tile_norms(m, n, alpha))(flat)  # (hw, i/n, o/a)
+    thresh = jnp.quantile(norms.reshape(-1), target_sparsity)
+    keep = norms > thresh
+    mask = jnp.repeat(jnp.repeat(keep, n, axis=1), alpha, axis=2)
+    mask = mask[:, :i, :o].reshape(h, w, i, o)
+    return mask.astype(w_hwio.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Statistics the paper reports
+# ---------------------------------------------------------------------------
+
+
+def sparsity_ratio(mask: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of zero weights."""
+    return 1.0 - jnp.mean(mask.astype(jnp.float32))
+
+
+def zero_groupset_proportion(mask2d: jnp.ndarray, group: int, alpha: int) -> jnp.ndarray:
+    """Fraction of (group x alpha) group-sets that are entirely zero - the
+    rows the CIM macro never stores or computes ("zero-row proportion")."""
+    t = tile_view(mask2d, group, alpha)
+    alive = jnp.any(t > 0, axis=(-2, -1))
+    return 1.0 - jnp.mean(alive.astype(jnp.float32))
+
+
+def compression_rate(sparsity: float, w_bits: int) -> float:
+    """Paper's Table II metric: (32 / w_bits) / (1 - sparsity)."""
+    return (32.0 / float(w_bits)) / max(1.0 - float(sparsity), 1e-9)
+
+
+def index_storage_bits(mask2d: jnp.ndarray, group: int, alpha: int) -> jnp.ndarray:
+    """16-bit index code per surviving group-set (Fig. 6 / Table IV)."""
+    t = tile_view(mask2d, group, alpha)
+    alive = jnp.any(t > 0, axis=(-2, -1))
+    return jnp.sum(alive.astype(jnp.int32)) * 16
+
+
+def weight_storage_bits(mask2d: jnp.ndarray, group: int, alpha: int, w_bits: int):
+    """Bits to store the surviving group-sets (whole tiles are kept)."""
+    t = tile_view(mask2d, group, alpha)
+    alive = jnp.any(t > 0, axis=(-2, -1))
+    return jnp.sum(alive.astype(jnp.int32)) * group * alpha * w_bits
+
+
+def apply_mask(params_tree, mask_tree):
+    """Elementwise multiply; masks of None pass through."""
+    return jax.tree.map(
+        lambda p, m: p if m is None else p * m.astype(p.dtype),
+        params_tree,
+        mask_tree,
+        is_leaf=lambda x: x is None,
+    )

@@ -1,0 +1,1 @@
+from .pipeline import ImagePipeline, TokenPipeline  # noqa: F401

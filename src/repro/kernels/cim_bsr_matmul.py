@@ -1,0 +1,91 @@
+"""Block-sparse int8 matmul - the MARS zero-group-set skip, TPU-native.
+
+This is the paper's central hardware mechanism (§III.B) re-expressed for
+the TPU memory hierarchy:
+
+  SRAM-CIM macro                      TPU kernel
+  ------------------------------      -----------------------------------
+  nonzero group-sets packed in        nonzero (bk x bn) weight blocks
+  the 64 Kb macro (Fig. 5b)           packed densely in HBM
+  16-bit index codes in Index SRAM    row_idx (SMEM, scalar-prefetched)
+  SAS generates IFM addresses         BlockSpec index_map steers the x DMA
+  zero group-sets never computed      padding slots masked from the MXU
+  ping-pong FM SRAMs                  Pallas double-buffered VMEM pipeline
+
+Weights are stored as int8 levels (eq. 8 output x 2^{b-1}) with one f32
+scale per block; dequantization rides the VPU before the MXU matmul, so -
+exactly as in MARS - no high-precision weight path exists at rest.
+
+Layout (column-major ELL, from core.mapping.pack_bsr):
+  x:       (M, K)                activations
+  blocks:  (go, nnz_max, bk, bn) int8 packed nonzero blocks
+  scales:  (go, nnz_max)         f32 per-block scale
+  row_idx: (go, nnz_max)         int32 k-block index per slot (pad -> 0)
+  nnz:     (go,)                 int32 true slot counts
+  out:     (M, N=go*bn)
+
+Grid = (M/bm, go, nnz_max); the slot axis is innermost so each output tile
+stays resident in VMEM across its accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 128
+
+
+def _kernel(row_idx_ref, nnz_ref, x_ref, blocks_ref, scales_ref, out_ref,
+            *, acc_dtype):
+    i, j, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(s < nnz_ref[j])
+    def _accum():
+        w = blocks_ref[0, 0].astype(acc_dtype) * scales_ref[0, 0]
+        out_ref[...] += jnp.dot(
+            x_ref[...].astype(acc_dtype), w, preferred_element_type=acc_dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "interpret", "acc_dtype")
+)
+def bsr_matmul(x: jnp.ndarray, blocks: jnp.ndarray, scales: jnp.ndarray,
+               row_idx: jnp.ndarray, nnz: jnp.ndarray, bm: int = DEFAULT_BM,
+               interpret: bool = True, acc_dtype=jnp.float32) -> jnp.ndarray:
+    """y = x @ W for BSR-packed W. Returns (M, go*bn) in acc_dtype."""
+    m, k = x.shape
+    go, nnz_max, bk, bn = blocks.shape
+    assert k % bk == 0, (k, bk)
+    assert row_idx.shape == (go, nnz_max)
+    pad_m = (-m) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    mt = x.shape[0] // bm
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(mt, go, nnz_max),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s, ri, nz: (i, ri[j, s])),
+            pl.BlockSpec((1, 1, bk, bn), lambda i, j, s, ri, nz: (j, s, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, s, ri, nz: (j, s)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, ri, nz: (i, j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, acc_dtype=acc_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], go * bn), acc_dtype),
+        interpret=interpret,
+    )(row_idx, nnz, x, blocks, scales.astype(acc_dtype))
+    return out[:m]

@@ -1,0 +1,75 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels target TPU v5e and are validated in interpret mode per the spec).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.mapping import BsrWeight, pack_bsr
+from ..core.quant import weight_int_levels
+from . import cim_bsr_matmul, fake_quant as _fq, quant_matmul as _qm, ssd_intra as _ssd
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()
+
+
+# ---------------------------------------------------------------------------
+# Deployment packing: quantized dense weight -> device arrays for the kernel
+# ---------------------------------------------------------------------------
+
+
+def pack_for_kernel(w_q: np.ndarray, bits: int, bk: int = 128, bn: int = 128
+                    ) -> dict:
+    """Take eq.8 output (float levels/2^{b-1}) and produce the kernel's
+    int8-blocks + scales + index arrays. Zero blocks are dropped (the CIM
+    skip). Returns a dict of jnp arrays."""
+    scale = 1.0 / (2.0 ** (bits - 1))
+    levels = np.asarray(np.round(np.asarray(w_q, np.float64) / scale), np.int8)
+    bsr = pack_bsr(levels, bk, bn)
+    go, nnz_max = bsr.row_idx.shape
+    scales = np.full((go, nnz_max), scale, np.float32)
+    return {
+        "blocks": jnp.asarray(bsr.blocks),
+        "scales": jnp.asarray(scales),
+        "row_idx": jnp.asarray(bsr.row_idx),
+        "nnz": jnp.asarray(bsr.nnz),
+        "density": bsr.density,
+    }
+
+
+def bsr_matmul(x, packed: dict, bm: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return cim_bsr_matmul.bsr_matmul(
+        x, packed["blocks"], packed["scales"], packed["row_idx"], packed["nnz"],
+        bm=bm, interpret=interpret,
+    )
+
+
+def quant_matmul(x, w_int8, scale, interpret: bool | None = None, **kw):
+    if interpret is None:
+        interpret = default_interpret()
+    return _qm.quant_matmul(x, w_int8, scale, interpret=interpret, **kw)
+
+
+def fake_quant(x, bits: int, signed: bool = False, interpret: bool | None = None, **kw):
+    if interpret is None:
+        interpret = default_interpret()
+    return _fq.fake_quant(x, bits, signed=signed, interpret=interpret, **kw)
+
+
+def ssd_intra(a, b, c, x, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _ssd.ssd_intra_chunk(a, b, c, x, interpret=interpret)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bsr_dense(blocks, scales, row_idx, nnz, k_dim: int) -> jnp.ndarray:
+    """Reconstruct the dense (K, N) weight from the packed BSR arrays."""
+    go, nnz_max, bk, bn = blocks.shape
+    w = np.zeros((k_dim, go * bn), dtype=np.float32)
+    blocks = np.asarray(blocks, dtype=np.float32)
+    scales = np.asarray(scales, dtype=np.float32)
+    row_idx = np.asarray(row_idx)
+    nnz = np.asarray(nnz)
+    for j in range(go):
+        for s in range(int(nnz[j])):
+            i = int(row_idx[j, s])
+            w[i * bk : (i + 1) * bk, j * bn : (j + 1) * bn] = blocks[j, s] * scales[j, s]
+    return jnp.asarray(w)
+
+
+def bsr_matmul_ref(x, blocks, scales, row_idx, nnz) -> jnp.ndarray:
+    w = bsr_dense(blocks, scales, row_idx, nnz, x.shape[1])
+    return x.astype(jnp.float32) @ w
+
+
+def quant_matmul_ref(x, w_int8, scale) -> jnp.ndarray:
+    return (x.astype(jnp.float32) @ w_int8.astype(jnp.float32)) * scale[None, :]
+
+
+def fake_quant_ref(x, bits: int, signed: bool = False) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    if signed:
+        qmax = 2.0 ** (bits - 1) - 1.0
+        y = jnp.round(jnp.clip(x32, -1.0, 1.0) * qmax) / (2.0 ** (bits - 1))
+    else:
+        levels = 2.0**bits - 1.0
+        y = jnp.round(jnp.clip(x32, 0.0, 1.0) * levels) / (2.0**bits)
+    return y.astype(x.dtype)
+
+
+def ssd_intra_ref(a, b, c, x):
+    """Oracle for ssd_intra_chunk. a: (C,H,l); b,c: (C,l,N); x: (C,l,H,P)."""
+    import numpy as np
+
+    a = np.asarray(a, np.float64)
+    C, H, l = a.shape
+    cum = np.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    causal = np.tril(np.ones((l, l), bool))
+    L = np.where(causal, np.exp(diff), 0.0)  # (C,H,l,l)
+    s = np.einsum("cin,cjn->cij", np.asarray(c, np.float64),
+                  np.asarray(b, np.float64))
+    y = np.einsum("chij,cij,cjhp->cihp", L, s, np.asarray(x, np.float64))
+    return jnp.asarray(y, x.dtype)

@@ -1,0 +1,1 @@
+from . import mesh, shardings  # noqa: F401  (dryrun imports jax-device state; import explicitly)

@@ -1,0 +1,427 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+__doc__ = """Multi-pod dry-run + roofline extraction (deliverables e, g).
+
+For every (architecture x input shape) cell and mesh:
+  1. full scanned-program ``jit(step).lower(**specs).compile()`` - proves
+     the distribution config is coherent (sharding, collectives, memory);
+  2. reduced-depth UNROLLED compiles at one and two pattern-periods for
+     exact per-layer FLOPs/bytes/collective-bytes (XLA cost analysis counts
+     a while-loop body once, so scanned programs under-report; DESIGN.md §6);
+  3. roofline terms vs TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM,
+     ~50 GB/s/link ICI.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out results.json
+"""
+
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import registry, transformer
+from ..models.config import ModelConfig, SHAPES, ShapeConfig
+from ..train import optimizer as optim
+from ..train.trainer import TrainConfig, make_train_step
+from . import shardings as SH
+from .mesh import make_production_mesh
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+# wire-volume factor per collective kind (ring algorithms, asymptotic)
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_OP_RE = re.compile(
+    r"\s(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device result bytes x wire factor, summed per collective kind.
+
+    Parses optimized HLO lines like
+      %all-reduce.3 = bf16[16,4096]{1,0} all-reduce(...)
+    including tuple results and layout suffixes; async ``-start`` counted
+    once, ``-done`` skipped."""
+    out = {k: 0.0 for k in _WIRE_FACTOR}
+    counts = {k: 0 for k in _WIRE_FACTOR}
+    for line in hlo_text.splitlines():
+        if "-done" in line or "=" not in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        eq = line.index("=")
+        lhs = line[eq + 1 : m.start()]
+        total = 0
+        for sm in _SHAPE_RE.finditer(lhs):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind] += total * _WIRE_FACTOR[kind]
+        counts[kind] += 1
+    out["_counts"] = counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    S = shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        batch = {"tokens": sd((B, 1), jnp.int32)}
+    else:
+        s_text = S - cfg.n_patches if cfg.family == "vlm" else S
+        batch = {"tokens": sd((B, s_text), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = sd((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            batch["frames"] = sd((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def _params_shape(cfg: ModelConfig):
+    fns = registry.model_fns(cfg)
+    return jax.eval_shape(lambda: fns.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def active_param_count(cfg: ModelConfig) -> float:
+    """N (active) for MODEL_FLOPS = 6*N*D / 2*N*D. Embedding tables excluded;
+    MoE expert weights scaled by top_k/n_experts."""
+    shapes = _params_shape(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    total = 0.0
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        name = keys[-1] if keys else ""
+        if name in ("embed", "pos_dec") or leaf.ndim < 2:
+            continue
+        n = float(np.prod(leaf.shape))
+        if cfg.family == "moe" and name in ("w_gate", "w_up", "w_down"):
+            n *= cfg.top_k / cfg.n_experts
+        total += n
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+# ---------------------------------------------------------------------------
+# Step construction with shardings
+# ---------------------------------------------------------------------------
+
+
+def _train_setup(cfg: ModelConfig, shape: ShapeConfig, mesh, opt=False,
+                 grad_accum: int = 1):
+    tcfg = TrainConfig(opt=optim.OptConfig(kind="adamw", clip_norm=1.0),
+                       grad_accum=grad_accum)
+    fns = registry.model_fns(cfg)
+    pshape = _params_shape(cfg)
+    pspecs = SH.param_specs(cfg, mesh.shape["model"], opt=opt)
+    ospecs = {"m": SH.zero1_specs(pspecs, pshape, mesh),
+              "v": SH.zero1_specs(pspecs, pshape, mesh)}
+    state_shape = {
+        "params": pshape,
+        "opt": jax.eval_shape(lambda: optim.init_state(tcfg.opt, pshape)),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    state_specs = {"params": pspecs, "opt": ospecs, "step": P()}
+    batch = input_specs(cfg, shape)
+    bspecs = SH.batch_specs(cfg, mesh, shape)
+    step = make_train_step(cfg, tcfg)
+    in_sh = (SH.to_named(state_specs, mesh), SH.to_named(bspecs, mesh))
+    metrics_specs = {"lr": P(), "grad_norm": P(), "loss": P()}
+    out_sh = (SH.to_named(state_specs, mesh), SH.to_named(metrics_specs, mesh))
+    args = (state_shape, batch)
+    return step, args, in_sh, out_sh
+
+
+def _prefill_setup(cfg: ModelConfig, shape: ShapeConfig, mesh, opt=False):
+    fns = registry.model_fns(cfg)
+    batch = input_specs(cfg, shape)
+    bspecs = SH.batch_specs(cfg, mesh, shape)
+    B = shape.global_batch
+    dp = SH.data_axes(mesh)
+    vx = "model" if cfg.vocab_eff % mesh.shape["model"] == 0 and cfg.vocab_eff == cfg.vocab else None
+    logits_spec = P(dp if B > 1 else None, vx)
+    cache_shape = jax.eval_shape(
+        lambda p, b: fns.prefill(p, b, cfg), _params_shape(cfg), batch
+    )[1]
+    cspecs = SH.cache_specs(cfg, mesh, B, opt=opt)
+    cspecs = {k: cspecs[k] for k in cache_shape}  # prefill cache key subset
+
+    def step(params, batch):
+        return fns.prefill(params, batch, cfg)
+
+    in_sh = (SH.to_named(SH.param_specs(cfg, mesh.shape["model"], opt=opt), mesh),
+             SH.to_named(bspecs, mesh))
+    out_sh = (NamedSharding(mesh, logits_spec), SH.to_named(cspecs, mesh))
+    args = (_params_shape(cfg), batch)
+    return step, args, in_sh, out_sh
+
+
+def _decode_setup(cfg: ModelConfig, shape: ShapeConfig, mesh, opt=False):
+    fns = registry.model_fns(cfg)
+    B = shape.global_batch
+    dp = SH.data_axes(mesh)
+    cache_shape = jax.eval_shape(
+        lambda: fns.init_cache(cfg, B, max_len=shape.seq_len)
+    )
+    cspecs = SH.cache_specs(cfg, mesh, B, opt=opt)
+    cspecs = {k: cspecs[k] for k in cache_shape}
+    batch = input_specs(cfg, shape)
+    tok_spec = P(dp, None) if B > 1 else P(None, None)
+    vx = "model" if cfg.vocab_eff % mesh.shape["model"] == 0 and cfg.vocab_eff == cfg.vocab else None
+    logits_spec = P(dp if B > 1 else None, vx)
+
+    def step(params, cache, tokens):
+        return fns.decode_step(params, cache, tokens, cfg)
+
+    in_sh = (SH.to_named(SH.param_specs(cfg, mesh.shape["model"], opt=opt), mesh),
+             SH.to_named(cspecs, mesh), NamedSharding(mesh, tok_spec))
+    out_sh = (NamedSharding(mesh, logits_spec), SH.to_named(cspecs, mesh))
+    args = (_params_shape(cfg), cache_shape, batch["tokens"])
+    return step, args, in_sh, out_sh
+
+
+OPT_OVERRIDES = dict(attn_chunk=1024, head_pad=16, moe_group_size=128,
+                     capacity_factor=1.0, ssm_chunk=128, ssd_lowp=True,
+                     ssm_split_proj=True, vocab_pad_multiple=256)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, opt: bool = False,
+               grad_accum: int = 1):
+    if shape.kind == "train":
+        return _train_setup(cfg, shape, mesh, opt=opt, grad_accum=grad_accum)
+    if shape.kind == "prefill":
+        return _prefill_setup(cfg, shape, mesh, opt=opt)
+    return _decode_setup(cfg, shape, mesh, opt=opt)
+
+
+def compile_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 donate: bool = True, opt: bool = False, grad_accum: int = 1):
+    step, args, in_sh, out_sh = build_cell(cfg, shape, mesh, opt=opt,
+                                           grad_accum=grad_accum)
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+# ---------------------------------------------------------------------------
+# Cost extrapolation (scan-aware; DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+def _pattern_period(cfg: ModelConfig) -> int:
+    if cfg.local_global_ratio > 0:
+        return cfg.local_global_ratio + 1
+    if cfg.family == "hybrid":
+        return cfg.attn_every
+    return 1
+
+
+def _reduced(cfg: ModelConfig, n_layers: int) -> ModelConfig:
+    kw = dict(n_layers=n_layers, scan_unroll=True)
+    if cfg.family == "encdec":
+        kw["enc_layers"] = max(1, cfg.enc_layers * n_layers // cfg.n_layers)
+    return dataclasses.replace(cfg, **kw)
+
+
+def cost_terms(cfg: ModelConfig, shape: ShapeConfig, mesh, opt: bool = False) -> dict:
+    """FLOPs / bytes / collective bytes per device, extrapolated to depth L."""
+    p = _pattern_period(cfg)
+    cfg_a, cfg_b = _reduced(cfg, p), _reduced(cfg, 2 * p)
+
+    def measure(c):
+        _, comp = compile_cell(c, shape, mesh, opt=opt)
+        ca = comp.cost_analysis()
+        coll = collective_bytes(comp.as_text())
+        return {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": sum(v for k, v in coll.items() if k != "_counts"),
+            "coll_by_kind": {k: v for k, v in coll.items() if k != "_counts"},
+            "coll_counts": coll["_counts"],
+        }
+
+    a = measure(cfg_a)
+    b = measure(cfg_b)
+    scale = (cfg.n_layers - p) / p
+
+    def extra(ka, kb):
+        # per-period deltas can be slightly negative on tiny decode graphs
+        # (constant folding differs between depths); clamp at zero
+        return ka + max(kb - ka, 0.0) * scale
+
+    return {
+        "flops": extra(a["flops"], b["flops"]),
+        "bytes": extra(a["bytes"], b["bytes"]),
+        "coll": extra(a["coll"], b["coll"]),
+        "coll_by_kind": {
+            k: extra(a["coll_by_kind"][k], b["coll_by_kind"][k])
+            for k in a["coll_by_kind"]
+        },
+        "coll_counts_1period": a["coll_counts"],
+        "period": p,
+    }
+
+
+def roofline(cfg: ModelConfig, shape: ShapeConfig, mesh, chips: int,
+             opt: bool = False) -> dict:
+    costs = cost_terms(cfg, shape, mesh, opt=opt)
+    t_compute = costs["flops"] / PEAK_FLOPS  # per-device flops / chip peak
+    t_memory = costs["bytes"] / HBM_BW
+    t_coll = costs["coll"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = costs["flops"] * chips
+    return {
+        **costs,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        # fraction of roofline-minimum time spent on the useful math
+        "roofline_fraction": (mf / chips / PEAK_FLOPS) / max(
+            max(terms.values()), 1e-12
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, cim: bool = False,
+             with_roofline: bool = True, opt: bool = False) -> dict:
+    cfg = registry.get_config(arch)
+    if cim:
+        cfg = dataclasses.replace(cfg, cim_mode="qat", w_bits=8, a_bits=8,
+                                  lambda_g=1e-5)
+    if opt:
+        cfg = dataclasses.replace(cfg, **OPT_OVERRIDES)
+        if cfg.family in ("dense", "vlm"):
+            # Megatron-SP residual: confirmed win for dense/vlm TP; REFUTED
+            # for MoE (conflicts with dispatch grouping: grok coll 3.7->171s)
+            cfg = dataclasses.replace(cfg, seq_shard_residual=True)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    jax.set_mesh(mesh)  # with_sharding_constraint needs a context mesh
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    lowered, compiled = compile_cell(cfg, shape, mesh, opt=opt)
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "cim": cim, "opt": opt,
+        "compile_s": round(t_compile, 1),
+        "argument_bytes_per_dev": int(ma.argument_size_in_bytes),
+        "output_bytes_per_dev": int(ma.output_size_in_bytes),
+        "temp_bytes_per_dev": int(ma.temp_size_in_bytes),
+        "peak_bytes_per_dev": int(ma.argument_size_in_bytes
+                                  + ma.temp_size_in_bytes),
+    }
+    if with_roofline:
+        rec.update(roofline(cfg, shape, mesh, chips, opt=opt))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--cim", action="store_true",
+                    help="enable the MARS QAT path in the compiled graph")
+    ap.add_argument("--opt", action="store_true",
+                    help="beyond-paper optimization set (EXPERIMENTS.md §Perf)")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    archs = registry.ARCH_IDS if args.arch == "all" else [args.arch]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+
+    results, failures = [], []
+    for arch in archs:
+        shapes = (registry.supported_cells(arch) if args.shape == "all"
+                  else [args.shape])
+        for shape_name in shapes:
+            for mp in pods:
+                tag = f"{arch} x {shape_name} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape_name, mp, cim=args.cim,
+                                   opt=args.opt,
+                                   with_roofline=not args.no_roofline and not mp)
+                    results.append(rec)
+                    extra = ""
+                    if "t_compute_s" in rec:
+                        extra = (f" compute={rec['t_compute_s']*1e3:.2f}ms"
+                                 f" memory={rec['t_memory_s']*1e3:.2f}ms"
+                                 f" coll={rec['t_collective_s']*1e3:.2f}ms"
+                                 f" bound={rec['bottleneck']}"
+                                 f" roofline={rec['roofline_fraction']:.2f}")
+                    print(f"PASS {tag} compile={rec['compile_s']}s "
+                          f"temp={rec['temp_bytes_per_dev']/2**30:.2f}GiB{extra}",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001 - report, keep sweeping
+                    failures.append({"cell": tag, "error": str(e)[:500]})
+                    print(f"FAIL {tag}: {str(e)[:200]}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"\n{len(results)} cells passed, {len(failures)} failed")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

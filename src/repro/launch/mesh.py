@@ -1,0 +1,17 @@
+"""Production mesh construction (assignment: MULTI-POD DRY-RUN step 1)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever this host actually has (CPU: 1 device) -> (1, 1) mesh so the
+    same pjit code paths run locally."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,246 @@
+"""PartitionSpec builders for every architecture family x shape kind.
+
+Sharding policy (DESIGN.md §4):
+  * batch over the data axes ("pod"+"data" multi-pod, "data" single-pod)
+  * TP over "model": QKV/up column-parallel, O/down row-parallel,
+    vocab-parallel embedding + head
+  * EP: MoE (sub-)experts over "data" + TP within experts over "model"
+    (all-to-all dispatch on the data axis)
+  * SP: long_500k (batch=1) shards sequence / KV-cache length over "data"
+  * ZeRO-1: optimizer moments additionally sharded over an axis the param
+    spec leaves free (zero1_specs)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeConfig
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _attn_layer_specs(cfg: ModelConfig, stacked: bool, model_n: int = 16,
+                      opt: bool = False) -> dict:
+    pre = (None,) if stacked else ()
+    # opt mode: when KV heads don't divide the TP axis, replicate K/V weights
+    # (Megatron GQA-style) - kills the pathological head resharding
+    kv_spec = (P(*pre, None, None)
+               if opt and cfg.n_kv_heads % model_n != 0
+               else P(*pre, None, "model"))
+    sp = {
+        "ln1": P(*pre), "ln2": P(*pre),
+        "wq": P(*pre, None, "model"),
+        "wk": kv_spec,
+        "wv": kv_spec,
+        "wo": P(*pre, "model", None),
+    }
+    if cfg.family == "moe":
+        sp["router"] = P(*pre)
+        sp["w_gate"] = P(*pre, "data", None, "model")
+        sp["w_up"] = P(*pre, "data", None, "model")
+        sp["w_down"] = P(*pre, "data", "model", None)
+    else:
+        sp["w_gate"] = P(*pre, None, "model")
+        sp["w_up"] = P(*pre, None, "model")
+        sp["w_down"] = P(*pre, "model", None)
+    return sp
+
+
+def _mamba_layer_specs(cfg: ModelConfig, pre: Tuple, opt: bool = False) -> dict:
+    if opt:
+        # opt mode = split layout (cfg.ssm_split_proj): z|x TP-sharded with
+        # shard-aligned boundaries; the tiny b|c / dt weights replicated so
+        # the SSD einsums see replicated B,C and run collective-free.
+        return {
+            "ln": P(*pre),
+            "w_zx": P(*pre, None, "model"),
+            "w_bc": P(*pre),
+            "w_dt": P(*pre),
+            "conv_xw": P(*pre, None, "model"),
+            "conv_xb": P(*pre, "model"),
+            "conv_bcw": P(*pre), "conv_bcb": P(*pre),
+            "a_log": P(*pre), "dt_bias": P(*pre), "d_skip": P(*pre),
+            "norm_g": P(*pre, "model"),
+            "out_proj": P(*pre, "model", None),
+        }
+    return {
+        "ln": P(*pre),
+        "in_proj": P(*pre, None, "model"),
+        "conv_w": P(*pre, None, "model"),
+        "conv_b": P(*pre, "model"),
+        "a_log": P(*pre), "dt_bias": P(*pre), "d_skip": P(*pre),
+        "norm_g": P(*pre, "model"),
+        "out_proj": P(*pre, "model", None),
+    }
+
+
+def _embed_specs(cfg: ModelConfig, model_n: int):
+    """Vocab-parallel embedding when the (possibly padded) vocab divides
+    the TP axis; whisper's 51865 and mamba2's 50280 need vocab_pad_multiple
+    (opt mode) or fall back to d-sharding + logits all-reduce (baseline)."""
+    if cfg.vocab_eff % model_n == 0:
+        return P("model", None), P(None, "model")
+    return P(None, "model"), P("model", None)
+
+
+def param_specs(cfg: ModelConfig, model_n: int = 16, opt: bool = False) -> dict:
+    """PartitionSpec pytree mirroring registry init_params exactly."""
+    emb_spec, head_spec = _embed_specs(cfg, model_n)
+    if cfg.family == "encdec":
+        kv = (P(None, None, None) if opt and cfg.n_kv_heads % model_n != 0
+              else P(None, None, "model"))
+        attn = {"wq": P(None, None, "model"), "wk": kv,
+                "wv": kv, "wo": P(None, "model", None)}
+        ln = {"g": P(None), "b": P(None)}
+        mlp = {"w_up": P(None, None, "model"), "w_down": P(None, "model", None)}
+        return {
+            "embed": emb_spec,
+            "pos_dec": P(),
+            "enc_layers": {"ln1": ln, "attn": attn, "ln2": ln, "mlp": mlp},
+            "dec_layers": {"ln1": ln, "self": attn, "lnx": ln, "cross": attn,
+                           "ln2": ln, "mlp": mlp},
+            "enc_ln": {"g": P(), "b": P()},
+            "dec_ln": {"g": P(), "b": P()},
+        }
+
+    sp: dict = {"embed": emb_spec, "final_ln": P()}
+    if not cfg.tie_embeddings:
+        sp["head"] = head_spec
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        sp["layers"] = _attn_layer_specs(cfg, stacked=True, model_n=model_n, opt=opt)
+    elif cfg.family == "ssm":
+        sp["layers"] = _mamba_layer_specs(cfg, (None,), opt=opt)
+    elif cfg.family == "hybrid":
+        sp["layers_body"] = _mamba_layer_specs(cfg, (None, None), opt=opt)
+        n_tail = cfg.n_layers - (cfg.n_layers // cfg.attn_every) * cfg.attn_every
+        if n_tail:
+            sp["layers_tail"] = _mamba_layer_specs(cfg, (None,), opt=opt)
+        shared = _attn_layer_specs(cfg, stacked=False, model_n=model_n, opt=opt)
+        sp["shared_attn"] = shared
+        sp["attn_gate"] = P()
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "vlm":
+        sp["mm_proj"] = P(None, "model")
+    return sp
+
+
+def _kv_cache_spec(cfg: ModelConfig, mesh: Mesh, batch: int, lead: int = 1,
+                   opt: bool = False):
+    """Spec for (lead..., B, S, KV, dh) caches."""
+    dp = data_axes(mesh)
+    model_n = mesh.shape["model"]
+    pre = (None,) * lead
+    if opt:
+        # sequence-sharded cache: the decode DUS update stays local to one
+        # shard and per-token attention reduces over S with tiny collectives
+        if batch == 1:
+            return P(*pre, None, ("data", "model") if "pod" not in
+                     mesh.axis_names else ("pod", "data", "model"), None, None)
+        return P(*pre, dp, "model", None, None)
+    if batch == 1:
+        # SP: shard the cache length; heads over model if divisible
+        if cfg.n_kv_heads and cfg.n_kv_heads % model_n == 0:
+            return P(*pre, None, dp, "model", None)
+        return P(*pre, None, dp, None, None)
+    if cfg.n_kv_heads and cfg.n_kv_heads % model_n == 0:
+        return P(*pre, dp, None, "model", None)
+    if cfg.dh % model_n == 0:
+        return P(*pre, dp, None, None, "model")
+    return P(*pre, dp, None, None, None)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, opt: bool = False) -> dict:
+    dp = data_axes(mesh)
+    model_n = mesh.shape["model"]
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = _kv_cache_spec(cfg, mesh, batch, opt=opt)
+        return {"k": kv, "v": kv, "pos": P()}
+    if cfg.family == "ssm":
+        h_ax = "model" if cfg.n_ssm_heads % model_n == 0 else None
+        bp = dp if batch > 1 else None
+        return {
+            "conv": P(None, bp, None, "model"),
+            "ssm": P(None, bp, h_ax, None, None),
+            "pos": P(),
+        }
+    if cfg.family == "hybrid":
+        bp = dp if batch > 1 else None
+        h_ax = "model" if cfg.n_ssm_heads % model_n == 0 else None
+        kv = _kv_cache_spec(cfg, mesh, batch, opt=opt)
+        sp = {
+            "conv": P(None, None, bp, None, "model"),
+            "ssm": P(None, None, bp, h_ax, None, None),
+            "k": kv, "v": kv, "pos": P(),
+        }
+        n_tail = cfg.n_layers - (cfg.n_layers // cfg.attn_every) * cfg.attn_every
+        if n_tail:
+            sp["conv_tail"] = P(None, bp, None, "model")
+            sp["ssm_tail"] = P(None, bp, h_ax, None, None)
+        return sp
+    if cfg.family == "encdec":
+        kv = _kv_cache_spec(cfg, mesh, batch, opt=opt)
+        return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": P()}
+    raise ValueError(cfg.family)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> dict:
+    dp = data_axes(mesh)
+    if shape.kind == "decode":
+        tok = P(dp, None) if shape.global_batch > 1 else P(None, None)
+    elif shape.global_batch == 1:
+        tok = P(None, dp)  # SP over sequence
+    else:
+        tok = P(dp, None)
+    sp = {"tokens": tok}
+    if cfg.family == "vlm":
+        sp["patch_embeds"] = P(dp if shape.global_batch > 1 else None, None, None)
+    if cfg.family == "encdec":
+        sp["frames"] = P(dp if shape.global_batch > 1 else None, None, None)
+    return sp
+
+
+def zero1_specs(pspecs, params_shape, mesh: Mesh):
+    """Optimizer-moment specs: param spec + shard the largest free axis over
+    the data axes (ZeRO-1). Falls back to the param spec when nothing fits."""
+    dp = data_axes(mesh)
+
+    def one(spec: P, shape):
+        dims = list(spec) + [None] * (len(shape.shape) - len(spec))
+        used = set()
+        for d in dims:
+            for a in (d if isinstance(d, tuple) else (d,)):
+                if a is not None:
+                    used.add(a)
+        free = tuple(a for a in dp if a not in used)  # MoE uses "data" on E
+        if not free:
+            return spec
+        n_free = 1
+        for a in free:
+            n_free *= mesh.shape[a]
+        best, best_size = None, 0
+        for i, (s, d) in enumerate(zip(shape.shape, dims)):
+            if d is None and s % n_free == 0 and s > best_size:
+                best, best_size = i, s
+        if best is None:
+            return spec
+        dims[best] = free if len(free) > 1 else free[0]
+        return P(*dims)
+
+    return jax.tree.map(one, pspecs, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

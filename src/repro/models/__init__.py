@@ -1,0 +1,2 @@
+from . import cnn, config, encdec, layers, registry, ssm, transformer  # noqa: F401
+from .config import ModelConfig, ShapeConfig, SHAPES  # noqa: F401

@@ -1,0 +1,169 @@
+"""VGG16 / ResNet18 (CIFAR variants) built from CIMConv2D - the paper's own
+test networks (§V.B). Small variants exist for CPU-budget training in the
+benchmarks; layer shapes of the full nets match the paper exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import cim_layer as CL
+from ..core.cim_layer import CIMConfig
+
+
+VGG16_CFG = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M", 512, 512, 512, "M",
+             512, 512, 512, "M"]
+VGG_SMALL_CFG = [32, "M", 64, "M", 128, "M"]
+
+
+def vgg_init(key, cfg: CIMConfig, plan: Sequence = VGG16_CFG, in_ch: int = 3,
+             n_classes: int = 10, dtype=jnp.float32):
+    params, states = [], []
+    c = in_ch
+    for i, v in enumerate(plan):
+        if v == "M":
+            params.append(None)
+            states.append(None)
+            continue
+        key, sub = jax.random.split(key)
+        p, s = CL.conv_init(sub, 3, 3, c, v, cfg, dtype)
+        params.append(p)
+        states.append(s)
+        c = v
+    key, sub = jax.random.split(key)
+    head = {"w": jax.random.normal(sub, (c, n_classes), dtype) * (1.0 / c**0.5),
+            "b": jnp.zeros((n_classes,), dtype)}
+    return {"convs": params, "head": head}, {"convs": states}
+
+
+def vgg_apply(params, state, x, cfg: CIMConfig, plan: Sequence = VGG16_CFG,
+              train: bool = False):
+    new_states = []
+    i = 0
+    for v, p, s in zip(plan, params["convs"], state["convs"]):
+        if v == "M":
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                      (1, 2, 2, 1), "VALID")
+            new_states.append(None)
+            continue
+        x, s2 = CL.conv_apply(p, s, x, cfg, train=train)
+        x = jax.nn.relu(x)
+        # eq.5 assumes inputs in [0,1]; post-ReLU clip matches the paper's
+        # "clip function ... instead of normalization"
+        x = jnp.clip(x, 0.0, 1.0) if cfg.mode == "qat" else x
+        new_states.append(s2)
+        i += 1
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    logits = x @ params["head"]["w"] + params["head"]["b"]
+    return logits, {"convs": new_states}
+
+
+# ---------------------------------------------------------------------------
+# ResNet18 (CIFAR stem)
+# ---------------------------------------------------------------------------
+
+RESNET18_STAGES = [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)]
+RESNET_SMALL_STAGES = [(32, 1, 1), (64, 1, 2)]
+
+
+def resnet_init(key, cfg: CIMConfig, stages=RESNET18_STAGES, in_ch: int = 3,
+                n_classes: int = 10, dtype=jnp.float32):
+    key, sub = jax.random.split(key)
+    stem_p, stem_s = CL.conv_init(sub, 3, 3, in_ch, stages[0][0], cfg, dtype)
+    blocks_p, blocks_s = [], []
+    c = stages[0][0]
+    for width, nblocks, stride in stages:
+        for b in range(nblocks):
+            s0 = stride if b == 0 else 1
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            p1, s1 = CL.conv_init(k1, 3, 3, c, width, cfg, dtype)
+            p2, s2 = CL.conv_init(k2, 3, 3, width, width, cfg, dtype)
+            blk = {"conv1": p1, "conv2": p2, "stride": s0}
+            st = {"conv1": s1, "conv2": s2}
+            if s0 != 1 or c != width:
+                pd, sd = CL.conv_init(k3, 1, 1, c, width, cfg, dtype)
+                blk["down"] = pd
+                st["down"] = sd
+            blocks_p.append(blk)
+            blocks_s.append(st)
+            c = width
+    key, sub = jax.random.split(key)
+    head = {"w": jax.random.normal(sub, (c, n_classes), dtype) * (1.0 / c**0.5),
+            "b": jnp.zeros((n_classes,), dtype)}
+    return ({"stem": stem_p, "blocks": blocks_p, "head": head},
+            {"stem": stem_s, "blocks": blocks_s})
+
+
+def resnet_apply(params, state, x, cfg: CIMConfig, train: bool = False):
+    def act(x):
+        x = jax.nn.relu(x)
+        return jnp.clip(x, 0.0, 1.0) if cfg.mode == "qat" else x
+
+    x, stem_s = CL.conv_apply(params["stem"], state["stem"], x, cfg, train=train)
+    x = act(x)
+    new_blocks = []
+    for blk, st in zip(params["blocks"], state["blocks"]):
+        stride = blk["stride"]
+        h, s1 = CL.conv_apply(blk["conv1"], st["conv1"], x, cfg, stride=stride,
+                              train=train)
+        h = act(h)
+        h, s2 = CL.conv_apply(blk["conv2"], st["conv2"], h, cfg, train=train)
+        ns = {"conv1": s1, "conv2": s2}
+        if "down" in blk:
+            x, sd = CL.conv_apply(blk["down"], st["down"], x, cfg, stride=stride,
+                                  train=train)
+            ns["down"] = sd
+        x = act(x + h)
+        new_blocks.append(ns)
+    x = jnp.mean(x, axis=(1, 2))
+    logits = x @ params["head"]["w"] + params["head"]["b"]
+    return logits, {"stem": stem_s, "blocks": new_blocks}
+
+
+# ---------------------------------------------------------------------------
+# Compression-pipeline helpers (used by benchmarks/examples)
+# ---------------------------------------------------------------------------
+
+
+def iter_conv_params(params):
+    """Yield every conv param dict in a CNN param tree."""
+    if "convs" in params:
+        for p in params["convs"]:
+            if p is not None:
+                yield p
+    else:
+        yield params["stem"]
+        for blk in params["blocks"]:
+            yield blk["conv1"]
+            yield blk["conv2"]
+            if "down" in blk:
+                yield blk["down"]
+
+
+def regularization(params, cfg: CIMConfig):
+    total = jnp.zeros((), jnp.float32)
+    for p in iter_conv_params(params):
+        total = total + CL.conv_regularizer(p, cfg)
+    return total
+
+
+def prune_all(params, cfg: CIMConfig):
+    """Recompute masks on every conv (in place on a copied tree)."""
+    import copy
+
+    out = copy.deepcopy(jax.tree.map(lambda x: x, params))
+    if "convs" in out:
+        out["convs"] = [
+            CL.conv_prune(p, cfg) if p is not None else None for p in out["convs"]
+        ]
+    else:
+        out["stem"] = CL.conv_prune(out["stem"], cfg)
+        for blk in out["blocks"]:
+            blk["conv1"] = CL.conv_prune(blk["conv1"], cfg)
+            blk["conv2"] = CL.conv_prune(blk["conv2"], cfg)
+            if "down" in blk:
+                blk["down"] = CL.conv_prune(blk["down"], cfg)
+    return out

@@ -1,0 +1,173 @@
+"""Model configuration shared by every architecture in the zoo."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from ..core.cim_layer import CIMConfig
+from ..core.quant import QuantConfig
+from ..core.sparsity import SparsityConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    expert_split: int = 1  # sub-expert FFN split so E*split matches the mesh
+
+    # SSM (mamba2 / hybrid)
+    ssm_state: int = 0
+    ssm_heads: int = 0  # 0 -> d_inner // 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    conv_width: int = 4
+
+    # attention patterns
+    window: int = 0  # sliding-window size for local layers (0 = full)
+    local_global_ratio: int = 0  # gemma3: this many local layers per global
+    attn_every: int = 0  # zamba2: shared attention block every k ssm layers
+
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 1500  # precomputed frame embeddings (frontend stub)
+
+    # vlm (llava)
+    n_patches: int = 0  # precomputed patch embeddings (frontend stub)
+
+    # numerics / distribution
+    dtype: str = "bfloat16"
+    rope_theta: float = 10000.0
+    remat: str = "full"  # full | none
+    scan_unroll: bool = False  # fully unroll layer scans (dry-run cost analysis)
+    tie_embeddings: bool = False
+
+    # --- beyond-paper performance knobs (EXPERIMENTS.md §Perf) ---
+    # 0 = paper-faithful baseline (naive S^2 attention); >0 = online-softmax
+    # chunked attention over KV blocks of this size
+    attn_chunk: int = 0
+    # 1 = baseline; 16 = pad Q/KV head counts up to a multiple that divides
+    # the TP axis (zero-initialized pad heads -> numerically identical)
+    head_pad: int = 1
+    # MoE dispatch token-group size (smaller -> smaller one-hot tensors and
+    # less capacity slack)
+    moe_group_size: int = 512
+    # SSD intra-chunk math in bf16 (decays still exp/cumsum in f32)
+    ssd_lowp: bool = False
+    # split the fused mamba in_proj/conv into shard-aligned segments
+    # (z|x, b|c, dt separate weights - numerically identical layout change)
+    ssm_split_proj: bool = False
+    # pad the vocab so the LM head shards over the TP axis (kills the
+    # full-logits partial-sum all-reduce when vocab % 16 != 0)
+    vocab_pad_multiple: int = 1
+    # explicit sharding hints inside the MoE block (prevents GSPMD's
+    # "involuntary full rematerialization" of dispatch/combine tensors)
+    moe_hints: bool = False
+    # Megatron-SP: shard the residual stream's sequence dim over the TP
+    # axis between layers (activation ARs become RS+AG pairs)
+    seq_shard_residual: bool = False
+
+    # MARS compression (the paper's technique, first-class)
+    cim_mode: str = "dense"  # dense | qat
+    w_bits: int = 8
+    a_bits: int = 8
+    lambda_g: float = 0.0
+    cim_alpha: int = 128  # TPU-native tile (MXU-aligned); paper CNNs use 16
+    cim_n: int = 128
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_heads_eff(self) -> int:
+        """Q heads after TP padding (zero-init pads keep math identical)."""
+        if self.head_pad <= 1 or self.n_heads == 0:
+            return self.n_heads
+        return -(-self.n_heads // self.head_pad) * self.head_pad
+
+    @property
+    def n_kv_heads_eff(self) -> int:
+        """KV heads are never padded: _expand_kv replicates by the TRUE
+        H/KV ratio and zero-pads the expanded heads, so the real heads'
+        math is unchanged."""
+        return self.n_kv_heads
+
+    @property
+    def vocab_eff(self) -> int:
+        m = max(self.vocab_pad_multiple, 1)
+        return -(-self.vocab // m) * m
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_inner(self) -> int:  # ssm inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.ssm_heads or max(1, self.d_inner // 64)
+
+    @property
+    def cim(self) -> CIMConfig:
+        return CIMConfig(
+            quant=QuantConfig(w_bits=self.w_bits, a_bits=self.a_bits,
+                              group_size=self.cim_alpha, a_signed=True),
+            sparsity=SparsityConfig(alpha=self.cim_alpha, n=self.cim_n,
+                                    lambda_g=self.lambda_g),
+            mode=self.cim_mode,
+        )
+
+    def layer_kinds(self) -> Tuple[int, ...]:
+        """Per-layer kind codes. dense/moe/vlm: 0=full attn, 1=windowed.
+        hybrid: 1 where the shared attention block fires."""
+        if self.local_global_ratio > 0:
+            # gemma3 pattern: (ratio) local then 1 global, repeating
+            period = self.local_global_ratio + 1
+            return tuple(
+                0 if (i % period == self.local_global_ratio) else 1
+                for i in range(self.n_layers)
+            )
+        if self.attn_every > 0:
+            return tuple(
+                1 if (i % self.attn_every == self.attn_every - 1) else 0
+                for i in range(self.n_layers)
+            )
+        return tuple(0 for _ in range(self.n_layers))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the assigned input-shape cells."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_serving(self) -> bool:
+        return self.kind in ("prefill", "decode")
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,207 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment spec the conv/mel frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, enc_seq, d_model). The rest is a
+faithful whisper transformer: LayerNorm (with bias), learned decoder
+positions, sinusoidal-free encoder (positions baked into stub frames),
+MHA (kv == heads), GELU MLP, tied output head.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+
+MAX_DEC_POS = 8192  # learned decoder positions (>= longest assigned shape? no
+# - decode_32k exceeds this; positions clamp, noted as a backbone-shape
+# exercise rather than a claim whisper generates 32k tokens)
+
+
+def _ln_init(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _attn_init(key, cfg: ModelConfig, dtype):
+    d, dh = cfg.d_model, cfg.dh
+    nh, nkv = cfg.n_heads_eff, cfg.n_kv_heads_eff
+    ks = jax.random.split(key, 4)
+    s = 1.0 / d**0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, nh * dh), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, nkv * dh), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, nkv * dh), dtype) * s,
+        "wo": jax.random.normal(ks[3], (nh * dh, d), dtype)
+        * (1.0 / (nh * dh) ** 0.5),
+    }
+
+
+def _mlp_init(key, cfg, dtype):
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": jax.random.normal(k1, (d, cfg.d_ff), dtype) * (1.0 / d**0.5),
+        "w_down": jax.random.normal(k2, (cfg.d_ff, d), dtype) * (1.0 / cfg.d_ff**0.5),
+    }
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _ln_init(cfg.d_model), "attn": _attn_init(k1, cfg, dtype),
+            "ln2": _ln_init(cfg.d_model), "mlp": _mlp_init(k2, cfg, dtype)}
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": _ln_init(cfg.d_model), "self": _attn_init(k1, cfg, dtype),
+        "lnx": _ln_init(cfg.d_model), "cross": _attn_init(k2, cfg, dtype),
+        "ln2": _ln_init(cfg.d_model), "mlp": _mlp_init(k3, cfg, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = cfg.param_dtype
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": jax.random.normal(ks[2], (cfg.vocab, cfg.d_model), dtype) * 0.02,
+        "pos_dec": jax.random.normal(ks[3], (MAX_DEC_POS, cfg.d_model), dtype) * 0.01,
+        "enc_layers": jax.vmap(functools.partial(_enc_layer_init, cfg=cfg, dtype=dtype))(enc_keys),
+        "dec_layers": jax.vmap(functools.partial(_dec_layer_init, cfg=cfg, dtype=dtype))(dec_keys),
+        "enc_ln": _ln_init(cfg.d_model),
+        "dec_ln": _ln_init(cfg.d_model),
+    }
+
+
+def _ln(x, p):
+    return L.layernorm(x, p["g"], p["b"])
+
+
+def encode(params, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: (B, T, D) stubbed embeddings -> encoder hidden (B, T, D)."""
+    x = frames.astype(cfg.param_dtype)
+
+    def body(x, p):
+        h = _ln(x, p["ln1"])
+        x = x + L.bidir_attention(p["attn"], h, cfg)
+        h = _ln(x, p["ln2"])
+        x = x + L.gelu_mlp(p["mlp"], h, cfg.cim)
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                        unroll=True if cfg.scan_unroll else 1)
+    return _ln(x, params["enc_ln"])
+
+
+def _dec_embed(params, tokens, pos0, cfg):
+    x = L.embed(params["embed"], tokens, cfg.param_dtype)
+    s = tokens.shape[1]
+    pidx = jnp.clip(pos0 + jnp.arange(s), 0, MAX_DEC_POS - 1)
+    return x + params["pos_dec"][pidx][None].astype(x.dtype)
+
+
+def decode_full(params, tokens: jnp.ndarray, enc: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Teacher-forced decoder over the full sequence (train)."""
+    x = _dec_embed(params, tokens, 0, cfg)
+
+    def body(x, p):
+        h = _ln(x, p["ln1"])
+        attn, _ = L.self_attention(p["self"], h, cfg, use_rope=False)
+        x = x + attn
+        h = _ln(x, p["lnx"])
+        b, t, _ = enc.shape
+        kx = L.cim_matmul(enc, p["cross"]["wk"].astype(enc.dtype), cfg.cim)
+        vx = L.cim_matmul(enc, p["cross"]["wv"].astype(enc.dtype), cfg.cim)
+        kx = kx.reshape(b, t, cfg.n_kv_heads_eff, cfg.dh)
+        vx = vx.reshape(b, t, cfg.n_kv_heads_eff, cfg.dh)
+        x = x + L.cross_attention(p["cross"], h, (kx, vx), cfg)
+        h = _ln(x, p["ln2"])
+        x = x + L.gelu_mlp(p["mlp"], h, cfg.cim)
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"],
+                        unroll=True if cfg.scan_unroll else 1)
+    return _ln(x, params["dec_ln"])
+
+
+def train_loss(params, batch, cfg: ModelConfig) -> jnp.ndarray:
+    enc = encode(params, batch["frames"], cfg)
+    hidden = decode_full(params, batch["tokens"], enc, cfg)
+    logits = L.logits_out(params["embed"].T, hidden[:, :-1, :], cfg.cim)
+    return L.cross_entropy(logits, batch["tokens"][:, 1:])
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or cfg.param_dtype
+    Lc = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads_eff, cfg.dh)
+    Xc = (cfg.n_layers, batch_size, cfg.enc_seq, cfg.n_kv_heads_eff, cfg.dh)
+    return {"k": jnp.zeros(Lc, dtype), "v": jnp.zeros(Lc, dtype),
+            "xk": jnp.zeros(Xc, dtype), "xv": jnp.zeros(Xc, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Encode + teacher-forced prefill of the decoder prompt; fills both the
+    self-attn cache and the precomputed cross K/V."""
+    enc = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _dec_embed(params, tokens, 0, cfg)
+
+    def body(x, p):
+        h = _ln(x, p["ln1"])
+        attn, (k, v) = L.self_attention(p["self"], h, cfg, use_rope=False)
+        x = x + attn
+        h = _ln(x, p["lnx"])
+        t = enc.shape[1]
+        kx = L.cim_matmul(enc, p["cross"]["wk"].astype(enc.dtype), cfg.cim)
+        vx = L.cim_matmul(enc, p["cross"]["wv"].astype(enc.dtype), cfg.cim)
+        kx = kx.reshape(b, t, cfg.n_kv_heads_eff, cfg.dh)
+        vx = vx.reshape(b, t, cfg.n_kv_heads_eff, cfg.dh)
+        x = x + L.cross_attention(p["cross"], h, (kx, vx), cfg)
+        h = _ln(x, p["ln2"])
+        x = x + L.gelu_mlp(p["mlp"], h, cfg.cim)
+        return x, (k, v, kx, vx)
+
+    x, (k, v, kx, vx) = jax.lax.scan(body, x, params["dec_layers"],
+                                     unroll=True if cfg.scan_unroll else 1)
+    x = _ln(x, params["dec_ln"])
+    logits = L.logits_out(params["embed"].T, x[:, -1:, :], cfg.cim)[:, 0, :]
+    return logits, {"k": k, "v": v, "xk": kx, "xv": vx,
+                    "pos": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One decoder token. tokens: (B,1)."""
+    pos = cache["pos"]
+    x = _dec_embed(params, tokens, pos, cfg)
+
+    def body(x, xs):
+        p, kc, vc, kx, vx = xs
+        h = _ln(x, p["ln1"])
+        attn, kc, vc = L.decode_attention(p["self"], h, kc, vc, pos, cfg,
+                                          use_rope=False)
+        x = x + attn
+        h = _ln(x, p["lnx"])
+        x = x + L.cross_attention(p["cross"], h, (kx.astype(x.dtype), vx.astype(x.dtype)), cfg)
+        h = _ln(x, p["ln2"])
+        x = x + L.gelu_mlp(p["mlp"], h, cfg.cim)
+        return x, (kc, vc)
+
+    x, (k, v) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        unroll=True if cfg.scan_unroll else 1,
+    )
+    x = _ln(x, params["dec_ln"])
+    logits = L.logits_out(params["embed"].T, x, cfg.cim)[:, 0, :]
+    return logits, {"k": k, "v": v, "xk": cache["xk"], "xv": cache["xv"], "pos": pos + 1}

@@ -1,0 +1,374 @@
+"""Shared neural building blocks (pure JAX, pjit/GSPMD-friendly).
+
+Every weight matmul routes through ``cim_matmul`` so the MARS technique
+(eq.5 activation quant + eqs.6-8 weight quant, group-lasso structure) is a
+first-class, config-gated feature of every architecture - not a bolt-on.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import quant as Q
+from ..core.cim_layer import CIMConfig
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# MARS-quantized matmul (the paper's technique on the LM fast path)
+# ---------------------------------------------------------------------------
+
+
+def maybe_quant_a(x: jnp.ndarray, cim: CIMConfig) -> jnp.ndarray:
+    if cim.mode == "qat" and cim.quant.enabled:
+        return Q.quantize_activation(x.astype(jnp.float32), cim.quant.a_bits,
+                                     cim.quant.a_signed).astype(x.dtype)
+    return x
+
+
+def maybe_quant_w(w: jnp.ndarray, cim: CIMConfig) -> jnp.ndarray:
+    if cim.mode == "qat" and cim.quant.enabled:
+        wq = Q.tanh_normalize(w.astype(jnp.float32), cim.quant.group_size)
+        return Q.quantize_weight_symmetric(wq, cim.quant.w_bits).astype(w.dtype)
+    return w
+
+
+def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, cim: CIMConfig) -> jnp.ndarray:
+    """x @ w with MARS QAT when enabled. w: (d_in, d_out) or (E, d_in, d_out)."""
+    return maybe_quant_a(x, cim) @ maybe_quant_w(w, cim)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + g.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * g + b).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal, sliding-window, cross, KV-cache decode)
+# ---------------------------------------------------------------------------
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int, n_true: int = 0) -> jnp.ndarray:
+    """(B, S, KV, dh) -> (B, S, H, dh): repeat each kv head by the TRUE
+    H/KV ratio, then zero-pad up to ``n_heads`` (TP head padding - the pad
+    q-heads are zero-weighted so their kv content is irrelevant)."""
+    b, s, kv, dh = k.shape
+    n_true = n_true or n_heads
+    if kv != n_true:
+        k = jnp.repeat(k, n_true // kv, axis=2)
+    if n_heads > n_true:
+        k = jnp.pad(k, [(0, 0), (0, 0), (0, n_heads - n_true), (0, 0)])
+    return k
+
+
+def attention_scores(q, k, v, mask) -> jnp.ndarray:
+    """q: (B,Sq,H,dh) k,v: (B,Sk,H,dh) mask: broadcastable (B,1,Sq,Sk)."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def causal_mask(sq: int, sk: int, window=0, offset: int = 0):
+    """(1,1,Sq,Sk) causal (+sliding window) mask. ``window`` may be a traced
+    per-layer scalar (gemma3 local/global pattern under scan); <=0 = full.
+    ``offset`` = absolute position of query 0 minus key 0."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    w = jnp.asarray(window)
+    m = m & ((w <= 0) | (kj > qi - w))
+    return m[None, None]
+
+
+def qkv_project(p: dict, x: jnp.ndarray, cfg, cim: CIMConfig):
+    b, s, _ = x.shape
+    nh = getattr(cfg, "n_heads_eff", cfg.n_heads)
+    nkv = getattr(cfg, "n_kv_heads_eff", cfg.n_kv_heads)
+    q = cim_matmul(x, p["wq"].astype(x.dtype), cim).reshape(b, s, nh, cfg.dh)
+    k = cim_matmul(x, p["wk"].astype(x.dtype), cim).reshape(b, s, nkv, cfg.dh)
+    v = cim_matmul(x, p["wv"].astype(x.dtype), cim).reshape(b, s, nkv, cfg.dh)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, n_heads: int, chunk: int, window=0,
+                      offset: int = 0, n_true: int = 0,
+                      unroll: bool = False) -> jnp.ndarray:
+    """Online-softmax (flash-style) attention over KV chunks.
+
+    Never materializes the (Sq, Sk) score matrix - the beyond-paper memory
+    optimization of EXPERIMENTS.md §Perf. q: (B,Sq,H,dh); k, v: (B,Sk,KV,dh)
+    un-expanded (GQA expansion happens per chunk). Causal with optional
+    sliding window; ``offset`` = absolute position of q row 0 minus k row 0.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    pad = (-sk) % chunk
+    if pad:
+        cfgp = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k = jnp.pad(k, cfgp)
+        v = jnp.pad(v, cfgp)
+    nc = k.shape[1] // chunk
+    kc = k.reshape(b, nc, chunk, *k.shape[2:]).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, *v.shape[2:]).transpose(1, 0, 2, 3, 4)
+    qi = (jnp.arange(sq) + offset)[:, None]  # (Sq, 1)
+    w = jnp.asarray(window)
+    scale = 1.0 / jnp.sqrt(dh)
+    q32 = q.astype(jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj0, kcj, vcj = inp
+        ke = _expand_kv(kcj, n_heads, n_true).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, ke) * scale  # (B,H,Sq,C)
+        kj = kj0 + jnp.arange(chunk)[None, :]
+        mask = (kj <= qi) & ((w <= 0) | (kj > qi - w)) & (kj < sk)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)  # (B,H,Sq)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        ve = _expand_kv(vcj, n_heads, n_true).astype(jnp.float32)
+        pv = jnp.einsum("bhqk,bkhd->bqhd", p, ve)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] + pv
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((b, n_heads, sq), NEG_INF, jnp.float32),
+        jnp.zeros((b, n_heads, sq), jnp.float32),
+        jnp.zeros((b, sq, n_heads, dh), jnp.float32),
+    )
+    starts = jnp.arange(nc) * chunk
+    (m, l, acc), _ = jax.lax.scan(body, init, (starts, kc, vc),
+                                  unroll=True if unroll else 1)
+    out = acc / jnp.maximum(l.transpose(0, 2, 1)[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def self_attention(p: dict, x: jnp.ndarray, cfg, window: int = 0,
+                   positions: Optional[jnp.ndarray] = None,
+                   use_rope: bool = True) -> Tuple[jnp.ndarray, Tuple]:
+    """Full-sequence self-attention (train / prefill). Returns (y, (k, v))."""
+    b, s, d = x.shape
+    nh = getattr(cfg, "n_heads_eff", cfg.n_heads)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = qkv_project(p, x, cfg, cfg.cim)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    chunk = getattr(cfg, "attn_chunk", 0)
+    # chunking pays when S^2 scores dominate; at short S the extra f32
+    # accumulator traffic + remat-over-scan recompute outweighs it
+    # (measured: grok train_4k memory 3.0s -> 6.9s with chunking at S=4096)
+    if chunk and s >= max(4 * chunk, 8192):
+        o = chunked_attention(q, k, v, nh, chunk, window=window,
+                              n_true=cfg.n_heads,
+                              unroll=getattr(cfg, "scan_unroll", False))
+    else:
+        mask = causal_mask(s, s, window)
+        o = attention_scores(q, _expand_kv(k, nh, cfg.n_heads),
+                             _expand_kv(v, nh, cfg.n_heads), mask)
+    y = cim_matmul(o.reshape(b, s, nh * cfg.dh), p["wo"].astype(x.dtype), cfg.cim)
+    return y, (k, v)
+
+
+def bidir_attention(p: dict, x: jnp.ndarray, cfg, use_rope: bool = False):
+    """Encoder self-attention (no mask)."""
+    b, s, d = x.shape
+    nh = getattr(cfg, "n_heads_eff", cfg.n_heads)
+    q, k, v = qkv_project(p, x, cfg, cfg.cim)
+    if use_rope:
+        pos = jnp.arange(s)[None, :]
+        q, k = rope(q, pos, cfg.rope_theta), rope(k, pos, cfg.rope_theta)
+    mask = jnp.ones((1, 1, s, s), dtype=bool)
+    o = attention_scores(q, _expand_kv(k, nh, cfg.n_heads),
+                         _expand_kv(v, nh, cfg.n_heads), mask)
+    return cim_matmul(o.reshape(b, s, -1), p["wo"].astype(x.dtype), cfg.cim)
+
+
+def cross_attention(p: dict, x: jnp.ndarray, enc_kv: Tuple, cfg) -> jnp.ndarray:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    b, s, d = x.shape
+    nh = getattr(cfg, "n_heads_eff", cfg.n_heads)
+    q = cim_matmul(x, p["wq"].astype(x.dtype), cfg.cim).reshape(b, s, nh, cfg.dh)
+    k, v = enc_kv
+    mask = jnp.ones((1, 1, s, k.shape[1]), dtype=bool)
+    o = attention_scores(q, _expand_kv(k, nh, cfg.n_heads),
+                         _expand_kv(v, nh, cfg.n_heads), mask)
+    return cim_matmul(o.reshape(b, s, -1), p["wo"].astype(x.dtype), cfg.cim)
+
+
+def decode_attention(p: dict, x1: jnp.ndarray, kcache: jnp.ndarray,
+                     vcache: jnp.ndarray, pos: jnp.ndarray, cfg,
+                     window: int = 0, use_rope: bool = True, ring: bool = False):
+    """One-token decode. x1: (B,1,D); caches (B,Smax,KV,dh); pos: scalar
+    absolute position. ``ring=True`` treats the cache as a ring buffer of
+    the sliding window (write at pos % Smax, attend all valid slots).
+    Returns (y, new_kcache, new_vcache)."""
+    b, _, d = x1.shape
+    smax = kcache.shape[1]
+    q, k, v = qkv_project(p, x1, cfg, cfg.cim)
+    if use_rope:
+        pp = jnp.full((1, 1), pos)
+        q, k = rope(q, pp, cfg.rope_theta), rope(k, pp, cfg.rope_theta)
+    wpos = pos % smax if ring else pos
+    kcache = jax.lax.dynamic_update_slice(kcache, k.astype(kcache.dtype), (0, wpos, 0, 0))
+    vcache = jax.lax.dynamic_update_slice(vcache, v.astype(vcache.dtype), (0, wpos, 0, 0))
+    kj = jnp.arange(smax)[None, None, None, :]
+    if ring:
+        mask = kj < jnp.minimum(pos + 1, smax)
+    else:
+        mask = kj <= pos
+        w = jnp.asarray(window)
+        mask = mask & ((w <= 0) | (kj > pos - w))
+    nh = getattr(cfg, "n_heads_eff", cfg.n_heads)
+    o = attention_scores(
+        q, _expand_kv(kcache.astype(x1.dtype), nh, cfg.n_heads),
+        _expand_kv(vcache.astype(x1.dtype), nh, cfg.n_heads), mask
+    )
+    y = cim_matmul(o.reshape(b, 1, -1), p["wo"].astype(x1.dtype), cfg.cim)
+    return y, kcache, vcache
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+
+def gated_mlp(p: dict, x: jnp.ndarray, cim: CIMConfig, act=jax.nn.silu) -> jnp.ndarray:
+    h = act(cim_matmul(x, p["w_gate"].astype(x.dtype), cim)) * cim_matmul(
+        x, p["w_up"].astype(x.dtype), cim
+    )
+    return cim_matmul(h, p["w_down"].astype(x.dtype), cim)
+
+
+def gelu_mlp(p: dict, x: jnp.ndarray, cim: CIMConfig) -> jnp.ndarray:
+    h = jax.nn.gelu(cim_matmul(x, p["w_up"].astype(x.dtype), cim))
+    return cim_matmul(h, p["w_down"].astype(x.dtype), cim)
+
+
+def moe_block(p: dict, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k MoE with grouped capacity dispatch (Switch/GSPMD style).
+
+    x: (B, S, D). Experts (E, D, FF) are expert-parallel; the one-hot
+    dispatch einsums lower to all-to-alls under GSPMD. Token groups bound
+    the dispatch tensor size; capacity is per group. Returns (y, aux_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    gs = min(getattr(cfg, "moe_group_size", 512), s)
+    ng = s // gs
+    cap = max(k, int(cfg.capacity_factor * gs * k / e))
+
+    xg = x.reshape(b, ng, gs, d)
+    router_logits = xg.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gates = jax.nn.softmax(router_logits, axis=-1)  # (b, ng, gs, e)
+    gate_k, idx_k = jax.lax.top_k(gates, k)  # (b, ng, gs, k)
+    gate_k = gate_k / (jnp.sum(gate_k, axis=-1, keepdims=True) + 1e-9)
+
+    # slot position of each (token, choice) within its expert's capacity
+    onehot = jax.nn.one_hot(idx_k, e, dtype=jnp.float32)  # (b,ng,gs,k,e)
+    pos_in_expert = jnp.cumsum(onehot.reshape(b, ng, gs * k, e), axis=2) - 1.0
+    pos_in_expert = pos_in_expert.reshape(b, ng, gs, k, e)
+    slot = jnp.sum(pos_in_expert * onehot, axis=-1)  # (b,ng,gs,k)
+    keep = slot < cap
+    gate_k = gate_k * keep
+
+    slot_oh = jax.nn.one_hot(slot.astype(jnp.int32), cap, dtype=jnp.float32)
+    # dispatch: (b, ng, gs, e, cap)
+    dispatch = jnp.einsum("bnske,bnskc->bnsec", onehot * keep[..., None], slot_oh)
+    combine = jnp.einsum("bnsk,bnske,bnskc->bnsec", gate_k, onehot, slot_oh)
+
+    if getattr(cfg, "moe_hints", False):
+        # keep the one-hot routing tensors batch-sharded; the expert
+        # all-to-all happens at the xin/out einsums, not during routing
+        # construction (otherwise GSPMD replicates these multi-GiB tensors
+        # on every device - "involuntary full rematerialization")
+        from jax.sharding import PartitionSpec as _PS
+        hint = lambda t: jax.lax.with_sharding_constraint(
+            t, _PS("data", None, None, None, None))
+        dispatch = hint(dispatch)
+        combine = hint(combine)
+
+    # expert_split: each expert's FFN halves into `split` sub-experts so the
+    # expert axis matches the mesh (grok: 8 experts -> 16 sub-experts).
+    # down(concat(h_a, h_b)) == down_a(h_a) + down_b(h_b), so routing the
+    # same tokens to both halves and summing via `combine` is exact.
+    split = getattr(cfg, "expert_split", 1)
+    if split > 1:
+        dispatch = jnp.repeat(dispatch, split, axis=3)
+        combine = jnp.repeat(combine, split, axis=3)
+
+    xin = jnp.einsum("bnsec,bnsd->ebncd", dispatch.astype(x.dtype), xg)
+    xin = maybe_quant_a(xin, cfg.cim)
+    wg = maybe_quant_w(p["w_gate"].astype(x.dtype), cfg.cim)
+    wu = maybe_quant_w(p["w_up"].astype(x.dtype), cfg.cim)
+    wd = maybe_quant_w(p["w_down"].astype(x.dtype), cfg.cim)
+    h = jax.nn.silu(jnp.einsum("ebncd,edf->ebncf", xin, wg))
+    h = maybe_quant_a(h * jnp.einsum("ebncd,edf->ebncf", xin, wu), cfg.cim)
+    out = jnp.einsum("ebncf,efd->ebncd", h, wd)
+    y = jnp.einsum("bnsec,ebncd->bnsd", combine.astype(x.dtype), out)
+
+    # Switch-style load-balancing auxiliary loss
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=3), axis=(0, 1, 2))  # (e,)
+    frac_router = jnp.mean(gates, axis=(0, 1, 2))  # (e,)
+    aux = e * jnp.sum(frac_tokens * frac_router)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def embed(emb: jnp.ndarray, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(emb, tokens, axis=0).astype(dtype)
+
+
+def logits_out(head: jnp.ndarray, x: jnp.ndarray, cim: CIMConfig) -> jnp.ndarray:
+    return cim_matmul(x, head.astype(x.dtype), cim)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean CE over unmasked positions. logits (B,S,V), labels (B,S)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / (jnp.sum(mask) + 1e-9)
+    return jnp.mean(nll)

@@ -1,0 +1,246 @@
+"""Mamba2 SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD for train/prefill (quadratic within chunks, linear across) and
+an O(1)-state recurrent step for decode. All projections route through
+``cim_matmul`` so the MARS compression applies to the SSM family too
+(DESIGN.md §Arch-applicability: the recurrence itself has no weight matmul
+and therefore no CIM sparsity - only the projections do).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cim_matmul, rmsnorm
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum a[..., j+1..i], -inf for j>i.
+    a: (..., l) -> (..., l, l)."""
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # sum over (j, i]
+    mask = jnp.arange(l)[:, None] >= jnp.arange(l)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+                chunk: int, h0: jnp.ndarray | None = None,
+                intra_dtype=jnp.float32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan. x: (B,S,H,P); a = dt*A: (B,S,H) (negative); b, c: (B,S,N)
+    (single group, shared across heads). Returns (y: (B,S,H,P), h_final:
+    (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        # zero-pad: a=0 -> decay exp(0)=1 and x=0 contributes nothing, so
+        # padded steps pass the state through unchanged (exact)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    s_out = S
+    S = S + pad
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, H, P)
+    ac = a.reshape(B, nc, chunk, H).transpose(0, 1, 3, 2)  # (B,nc,H,l)
+    bc = b.reshape(B, nc, chunk, N)
+    cc = c.reshape(B, nc, chunk, N)
+
+    a_cum = jnp.cumsum(ac, axis=-1)  # (B,nc,H,l)
+
+    # 1) intra-chunk (the "attention-like" diagonal block). The L tensor is
+    # the big one (B,nc,H,l,l); intra_dtype=bf16 halves its bytes (§Perf).
+    L = jnp.exp(_segsum(ac)).astype(intra_dtype)
+    y_diag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp",
+                        cc.astype(intra_dtype), bc.astype(intra_dtype), L,
+                        xc.astype(intra_dtype))
+
+    # 2) per-chunk final states
+    decay = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,nc,H,l)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn", bc, decay, xc)
+
+    # 3) inter-chunk recurrence over chunk boundaries
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (B,nc,H)
+
+    def step(h, inp):
+        st, dk = inp  # (B,H,P,N), (B,H)
+        h_new = h * dk[..., None, None] + st
+        return h_new, h  # emit the state *entering* the chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_last, h_in = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2).astype(jnp.float32)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # 4) contribution of the entering state to each position in the chunk
+    state_decay = jnp.exp(a_cum)  # (B,nc,H,l)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", cc, h_in, state_decay)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)[:, :s_out]
+    # internal math promotes to f32 (decays are exp/cumsum); the block's
+    # residual stream stays in the model dtype
+    return y.astype(x.dtype), h_last.astype(x.dtype)
+
+
+def ssd_step(h: jnp.ndarray, x1: jnp.ndarray, a1: jnp.ndarray, b1: jnp.ndarray,
+             c1: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One recurrent step. h: (B,H,P,N); x1: (B,H,P); a1: (B,H); b1, c1:
+    (B,N). Returns (y1: (B,H,P), h_new)."""
+    dtype0 = h.dtype
+    da = jnp.exp(a1)[..., None, None]
+    h = (h.astype(jnp.float32) * da
+         + jnp.einsum("bhp,bn->bhpn", x1, b1).astype(jnp.float32)).astype(dtype0)
+    y = jnp.einsum("bhpn,bn->bhp", h, c1)
+    return y, h
+
+
+# ---------------------------------------------------------------------------
+# The full Mamba2 block (in_proj -> conv -> SSD -> gate -> out_proj)
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg, dtype) -> dict:
+    """Per-layer parameter shapes (callers stack over L)."""
+    d, di = cfg.d_model, cfg.d_inner
+    H, N, W = cfg.n_ssm_heads, cfg.ssm_state, cfg.conv_width
+    conv_dim = di + 2 * N
+    ks = jax.random.split(key, 6)
+    s = 1.0 / (d ** 0.5)
+    common = {
+        "a_log": jnp.zeros((H,), jnp.float32),  # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm_g": jnp.zeros((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (di, d), dtype) * (1.0 / di ** 0.5),
+    }
+    if getattr(cfg, "ssm_split_proj", False):
+        # shard-aligned layout (§Perf): segment boundaries of the fused
+        # in_proj cut across TP shards, forcing full reshards; splitting
+        # into z|x / b|c / dt weights (and per-segment depthwise convs)
+        # is the same math with every slice local to its shard.
+        return {
+            "w_zx": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+            "w_bc": jax.random.normal(ks[3], (d, 2 * N), dtype) * s,
+            "w_dt": jax.random.normal(ks[4], (d, H), dtype) * s,
+            "conv_xw": jax.random.normal(ks[1], (W, di), dtype) * 0.1,
+            "conv_xb": jnp.zeros((di,), dtype),
+            "conv_bcw": jax.random.normal(ks[5], (W, 2 * N), dtype) * 0.1,
+            "conv_bcb": jnp.zeros((2 * N,), dtype),
+            **common,
+        }
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di + 2 * N + H), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (W, conv_dim), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        **common,
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d. xbc: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :], (1,), "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[-1],
+    )
+    return jax.nn.silu(out + b)
+
+
+def mamba_block(p: dict, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, Tuple]:
+    """Full-sequence forward. Returns (y, (conv_tail, h_final)) for cache."""
+    Bsz, S, _ = x.shape
+    di, N, H, W = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.conv_width
+    P = di // H
+    if "w_zx" in p:  # shard-aligned split layout (§Perf)
+        zx = cim_matmul(x, p["w_zx"].astype(x.dtype), cfg.cim)
+        z, xin = zx[..., :di], zx[..., di:]
+        bc = cim_matmul(x, p["w_bc"].astype(x.dtype), cfg.cim)
+        dt = cim_matmul(x, p["w_dt"].astype(x.dtype), cfg.cim)
+        conv_tail = jnp.concatenate([xin, bc], axis=-1)[:, -(W - 1):, :]
+        xin = _causal_conv(xin, p["conv_xw"].astype(x.dtype),
+                           p["conv_xb"].astype(x.dtype))
+        bc = _causal_conv(bc, p["conv_bcw"].astype(x.dtype),
+                          p["conv_bcb"].astype(x.dtype))
+        xs = xin.reshape(Bsz, S, H, P)
+        b, c = bc[..., :N], bc[..., N:]
+    else:
+        zxbcdt = cim_matmul(x, p["in_proj"].astype(x.dtype), cfg.cim)
+        z, xbc, dt = _split_proj(zxbcdt, cfg)
+        conv_tail = xbc[:, -(W - 1):, :]
+        xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+        xs = xbc[..., :di].reshape(Bsz, S, H, P)
+        b = xbc[..., di : di + N]
+        c = xbc[..., di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])[None, None, :] * dt  # (B,S,H), negative
+    y, h_last = ssd_chunked((xs * dt[..., None]).astype(x.dtype),
+                            a.astype(jnp.float32),
+                            b.astype(x.dtype), c.astype(x.dtype),
+                            min(cfg.ssm_chunk, S),
+                            intra_dtype=(jnp.bfloat16 if cfg.ssd_lowp
+                                         else jnp.float32))
+    y = y + xs * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(Bsz, S, di)
+    y = rmsnorm(y, p["norm_g"]) * jax.nn.silu(z)
+    return cim_matmul(y, p["out_proj"].astype(x.dtype), cfg.cim), (conv_tail, h_last)
+
+
+def mamba_decode_step(p: dict, x1: jnp.ndarray, conv_state: jnp.ndarray,
+                      h: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x1: (B,1,D); conv_state: (B,W-1,conv_dim); h:
+    (B,H,P,N). Returns (y1, conv_state, h)."""
+    Bsz = x1.shape[0]
+    di, N, H, W = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.conv_width
+    P = di // H
+    if "w_zx" in p:
+        zx = cim_matmul(x1, p["w_zx"].astype(x1.dtype), cfg.cim)[:, 0, :]
+        z, xin = zx[..., :di], zx[..., di:]
+        bc = cim_matmul(x1, p["w_bc"].astype(x1.dtype), cfg.cim)[:, 0, :]
+        dt = cim_matmul(x1, p["w_dt"].astype(x1.dtype), cfg.cim)[:, 0, :]
+        xbc_new = jnp.concatenate([xin, bc], axis=-1)
+        window = jnp.concatenate([conv_state, xbc_new[:, None, :]], axis=1)
+        conv_state = window[:, 1:, :]
+        conv_w = jnp.concatenate([p["conv_xw"], p["conv_bcw"]], axis=-1)
+        conv_b = jnp.concatenate([p["conv_xb"], p["conv_bcb"]], axis=-1)
+        conv = jnp.einsum("bwc,wc->bc", window, conv_w.astype(x1.dtype))
+        xbc = jax.nn.silu(conv + conv_b.astype(x1.dtype))
+        xs = xbc[..., :di].reshape(Bsz, H, P)
+        b = xbc[..., di : di + N]
+        c = xbc[..., di + N :]
+    else:
+        zxbcdt = cim_matmul(x1, p["in_proj"].astype(x1.dtype), cfg.cim)
+        z, xbc, dt = _split_proj(zxbcdt[:, 0, :], cfg)
+        window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,W,C)
+        conv_state = window[:, 1:, :]
+        conv = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(x1.dtype))
+        xbc = jax.nn.silu(conv + p["conv_b"].astype(x1.dtype))
+        xs = xbc[..., :di].reshape(Bsz, H, P)
+        b = xbc[..., di : di + N]
+        c = xbc[..., di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])[None, :] * dt
+    y1, h = ssd_step(h, (xs * dt[..., None]).astype(x1.dtype), a, b.astype(x1.dtype),
+                     c.astype(x1.dtype))
+    y1 = (y1 + xs * p["d_skip"][None, :, None].astype(x1.dtype)).astype(x1.dtype)
+    y1 = y1.reshape(Bsz, 1, di)
+    y1 = rmsnorm(y1, p["norm_g"]) * jax.nn.silu(z[:, None, :])
+    return cim_matmul(y1, p["out_proj"].astype(x1.dtype), cfg.cim), conv_state, h

@@ -1,0 +1,84 @@
+"""Batched serving engine: prefill + decode with KV/state caches.
+
+Serves any registry architecture. Greedy or temperature sampling, per-
+sequence EOS tracking (a finished row keeps decoding pad tokens but its
+output is frozen), bounded max_len. The pjit shardings for multi-chip
+serving come from launch.shardings; on CPU this runs eagerly jitted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import registry, transformer
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 => greedy
+    eos_id: int = -1  # -1 => never stop early
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.fns = registry.model_fns(cfg)
+        self._prefill = jax.jit(self.fns.prefill, static_argnames=("cfg",))
+        self._decode = jax.jit(self.fns.decode_step, static_argnames=("cfg",))
+
+    def generate(self, batch: dict, max_new_tokens: Optional[int] = None) -> np.ndarray:
+        """batch: tokens (B, S) [+ patch_embeds / frames]. Returns
+        (B, max_new_tokens) generated ids."""
+        scfg = self.scfg
+        n_new = max_new_tokens or scfg.max_new_tokens
+        B, S = batch["tokens"].shape
+        total = S + n_new
+        if self.cfg.family == "vlm":
+            total += batch["patch_embeds"].shape[1]
+
+        logits, cache = self._prefill(self.params, batch, cfg=self.cfg)
+        if self.cfg.family == "encdec":
+            dcache = self.fns.init_cache(self.cfg, B, max_len=total)
+            dcache["xk"], dcache["xv"] = cache["xk"], cache["xv"]
+            # replay self-attn cache from prefill (same layout, pad seq axis)
+            pads = [(0, 0), (0, 0), (0, total - cache["k"].shape[2]), (0, 0), (0, 0)]
+            dcache["k"] = jnp.pad(cache["k"], pads)
+            dcache["v"] = jnp.pad(cache["v"], pads)
+            dcache["pos"] = cache["pos"]
+            cache = dcache
+        elif self.cfg.family in ("dense", "moe", "vlm"):
+            cache = transformer.pad_cache(cache, total)
+        elif self.cfg.family == "hybrid":
+            # shared-attn KV is a ring buffer bounded by the window
+            kv_len = min(total, self.cfg.window) if self.cfg.window else total
+            cache = transformer.pad_cache(cache, kv_len)
+
+        key = jax.random.PRNGKey(scfg.seed)
+        out = np.zeros((B, n_new), np.int32)
+        done = np.zeros((B,), bool)
+        tok = self._sample(logits, key)
+        for t in range(n_new):
+            out[:, t] = np.where(done, 0, np.asarray(tok)[:, 0])
+            done |= np.asarray(tok)[:, 0] == scfg.eos_id
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cache, jnp.asarray(tok), cfg=self.cfg)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+        return out
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        probs_logits = logits / self.scfg.temperature
+        tok = jax.random.categorical(key, probs_logits, axis=-1)
+        return tok[:, None].astype(jnp.int32)

@@ -1,0 +1,3 @@
+from . import checkpoint, compression, optimizer, pipeline, trainer  # noqa: F401
+from .optimizer import OptConfig  # noqa: F401
+from .trainer import TrainConfig, init_train_state, make_train_step  # noqa: F401

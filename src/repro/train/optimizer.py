@@ -1,0 +1,116 @@
+"""Hand-rolled optimizers (no optax in this container): SGD+momentum and
+AdamW, pytree-based, with global-norm clipping and LR schedules.
+
+Optimizer states carry their own sharding story: under pjit the caller
+passes opt-state shardings from launch.shardings.zero1_specs (ZeRO-1:
+moments sharded over the data axis on top of the param sharding - without
+it grok-1's 314B x 8B of AdamW moments cannot fit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | sgdm
+    lr: float = 1e-3
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # cosine | step | const  (paper: step /10)
+    step_decay_every: int = 0
+    step_decay_rate: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def schedule_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "cosine":
+        t = jnp.clip((step - cfg.warmup_steps) /
+                     max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        base = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "step":
+        k = jnp.floor(step / max(cfg.step_decay_every, 1))
+        base = cfg.step_decay_rate**k
+    else:
+        base = jnp.ones(())
+    return cfg.lr * warm * base
+
+
+def init_state(cfg: OptConfig, params) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    if cfg.kind == "adamw":
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+    return {"m": jax.tree.map(zeros, params)}
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def apply_updates(cfg: OptConfig, params, opt_state: dict, grads, step):
+    """Returns (new_params, new_opt_state, metrics)."""
+    lr = schedule_lr(cfg, step)
+    if cfg.clip_norm > 0:
+        grads, gnorm = _clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = jnp.zeros(())
+
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        t = step.astype(jnp.float32) + 1.0
+        corr1 = 1.0 - b1**t
+        corr2 = 1.0 - b2**t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(m.dtype)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            mh = m / corr1
+            vh = v / corr2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if cfg.weight_decay > 0:
+                delta = delta + cfg.weight_decay * p.astype(m.dtype)
+            return (p.astype(m.dtype) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(opt_state["m"])
+        flat_v = tdef.flatten_up_to(opt_state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}, {"lr": lr, "grad_norm": gnorm}
+
+    # SGD + momentum
+    def upd(p, g, m):
+        g32 = g.astype(m.dtype)
+        if cfg.weight_decay > 0:
+            g32 = g32 + cfg.weight_decay * p.astype(m.dtype)
+        m = cfg.momentum * m + g32
+        return (p.astype(m.dtype) - lr * m).astype(p.dtype), m
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    return new_p, {"m": new_m}, {"lr": lr, "grad_norm": gnorm}

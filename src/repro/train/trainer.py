@@ -1,0 +1,114 @@
+"""Train-step construction: loss + MARS group-lasso regularization (eq. 2),
+microbatch gradient accumulation, optimizer update, metrics.
+
+The regularizer is path-filtered: it applies to the weights that map onto
+CIM macros (attention/MLP/MoE/SSM projections), not to norms, embeddings,
+routers or biases - mirroring the paper, which prunes conv layers only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.cim_layer import CIMConfig
+from ..core.sparsity import group_lasso_2d
+from ..models import registry
+from ..models.config import ModelConfig
+from . import optimizer as opt
+
+WEIGHT_KEYS = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+               "in_proj", "out_proj", "mm_proj"}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", "")))
+
+
+def lm_regularization(params, cim: CIMConfig) -> jnp.ndarray:
+    """Group lasso (eq. 4) over every CIM-mapped weight in the LM tree.
+    Handles stacked shapes: (d,f), (L,d,f), (L,E,d,f)."""
+    sc = cim.sparsity
+    total = jnp.zeros((), jnp.float32)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        if _leaf_name(path) not in WEIGHT_KEYS or not hasattr(leaf, "ndim"):
+            continue
+        w = leaf.astype(jnp.float32)
+        fn = lambda m: group_lasso_2d(m, sc.n, sc.alpha)
+        for _ in range(w.ndim - 2):
+            fn = jax.vmap(fn)
+
+        total = total + jnp.sum(fn(w))
+    return sc.lambda_g / 2.0 * total
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt.OptConfig = dataclasses.field(default_factory=opt.OptConfig)
+    grad_accum: int = 1
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 100
+    ckpt_keep: int = 3
+    log_every: int = 10
+
+
+def init_train_state(model_cfg: ModelConfig, tcfg: TrainConfig, key) -> dict:
+    fns = registry.model_fns(model_cfg)
+    params = fns.init_params(model_cfg, key)
+    return {
+        "params": params,
+        "opt": opt.init_state(tcfg.opt, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_loss_fn(model_cfg: ModelConfig) -> Callable:
+    fns = registry.model_fns(model_cfg)
+
+    def loss_fn(params, batch):
+        ce = fns.train_loss(params, batch, model_cfg)
+        total = ce
+        if model_cfg.cim_mode == "qat" and model_cfg.lambda_g > 0:
+            total = total + lm_regularization(params, model_cfg.cim)
+        return total, ce
+
+    return loss_fn
+
+
+def make_train_step(model_cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics). Pure function:
+    jit (and pjit via in/out shardings) is applied by the caller."""
+    loss_fn = make_loss_fn(model_cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.grad_accum > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (tot, ce), g = grad_fn(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b, gsum, g)
+                return (gsum, lsum + ce), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((tcfg.grad_accum, -1) + x.shape[1:]), batch
+            )
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, ce_sum), _ = jax.lax.scan(micro, (zero_g, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+            ce = ce_sum / tcfg.grad_accum
+        else:
+            (total, ce), grads = grad_fn(params, batch)
+        new_params, new_opt, metrics = opt.apply_updates(
+            tcfg.opt, params, state["opt"], grads, state["step"]
+        )
+        metrics = dict(metrics)
+        metrics["loss"] = ce
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step

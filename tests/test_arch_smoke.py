@@ -1,0 +1,72 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, asserting output shapes and no NaNs (assignment requirement f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.models.registry import ARCH_IDS
+
+
+def _batch_for(cfg, B=2, S=32, key=0):
+    k = jax.random.PRNGKey(key)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(k, (B, cfg.n_patches, cfg.d_model),
+                                                  jnp.float32) * 0.02
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(k, (B, cfg.enc_seq, cfg.d_model),
+                                            jnp.float32) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = registry.get_smoke_config(arch, dtype="float32")
+    fns = registry.model_fns(cfg)
+    params = fns.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    loss, grads = jax.value_and_grad(fns.train_loss)(params, batch, cfg)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    gnorm = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_qat_smoke(arch):
+    """The paper's technique enabled end-to-end (w8a8 QAT + group lasso)."""
+    cfg = registry.get_smoke_config(
+        arch, dtype="float32", cim_mode="qat", w_bits=8, a_bits=8,
+        lambda_g=1e-4, cim_alpha=16, cim_n=16,
+    )
+    fns = registry.model_fns(cfg)
+    params = fns.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    loss, grads = jax.value_and_grad(fns.train_loss)(params, batch, cfg)
+    assert jnp.isfinite(loss), f"{arch}: non-finite QAT loss"
+    gnorm = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0, f"{arch}: bad QAT grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_smoke(arch):
+    cfg = registry.get_smoke_config(arch, dtype="float32")
+    fns = registry.model_fns(cfg)
+    params = fns.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch_for(cfg, B, S)
+    logits, cache = fns.prefill(params, batch, cfg)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: prefill logits NaN"
+
+    # prefill cache layout differs from the fixed-size decode cache; decode
+    # continuity vs full-forward is covered in test_decode_consistency.
+    dcache = fns.init_cache(cfg, B, max_len=S + 8)
+    if cfg.family == "encdec":
+        dcache["xk"], dcache["xv"] = cache["xk"], cache["xv"]
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits2, dcache = fns.decode_step(params, dcache, tok, cfg)
+    assert logits2.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2))), f"{arch}: decode logits NaN"
+    assert int(dcache["pos"]) == 1

@@ -1,0 +1,39 @@
+"""expert_split correctness: splitting each expert's FFN into sub-experts
+must be numerically identical to the unsplit computation (the grok-1
+sharding trick - down(concat halves) == sum of half-downs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import registry
+
+
+def test_expert_split_exact():
+    cfg1 = registry.get_smoke_config("grok-1-314b", dtype="float32",
+                                     capacity_factor=16.0)
+    cfg2 = registry.get_smoke_config("grok-1-314b", dtype="float32",
+                                     capacity_factor=16.0, expert_split=2)
+    key = jax.random.PRNGKey(0)
+    e, d, ff = cfg1.n_experts, cfg1.d_model, cfg1.d_ff
+    ks = jax.random.split(key, 4)
+    p1 = {
+        "router": jax.random.normal(ks[0], (d, e)) * 0.1,
+        "w_gate": jax.random.normal(ks[1], (e, d, ff)) * 0.1,
+        "w_up": jax.random.normal(ks[2], (e, d, ff)) * 0.1,
+        "w_down": jax.random.normal(ks[3], (e, ff, d)) * 0.1,
+    }
+    # split view: (e, d, ff) -> (2e, d, ff/2); down (e, ff, d) -> (2e, ff/2, d)
+    p2 = {
+        "router": p1["router"],
+        "w_gate": p1["w_gate"].reshape(e, d, 2, ff // 2).transpose(0, 2, 1, 3)
+        .reshape(2 * e, d, ff // 2),
+        "w_up": p1["w_up"].reshape(e, d, 2, ff // 2).transpose(0, 2, 1, 3)
+        .reshape(2 * e, d, ff // 2),
+        "w_down": p1["w_down"].reshape(e, 2, ff // 2, d).reshape(2 * e, ff // 2, d),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d)) * 0.3
+    y1, aux1 = L.moe_block(p1, x, cfg1)
+    y2, aux2 = L.moe_block(p2, x, cfg2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-6)

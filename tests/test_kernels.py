@@ -1,0 +1,162 @@
+"""Per-kernel validation: shape/dtype sweeps vs the ref.py pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mapping import pack_bsr
+from repro.kernels import ops, ref
+from repro.kernels.cim_bsr_matmul import bsr_matmul
+from repro.kernels.fake_quant import fake_quant
+from repro.kernels.quant_matmul import quant_matmul
+
+
+def _sparse_weight(rng, k, n, bk, bn, density):
+    """Random int8-level weight with block sparsity."""
+    gi, go = k // bk, n // bn
+    keep = rng.random((gi, go)) < density
+    w = rng.integers(-7, 8, size=(k, n)).astype(np.int8)
+    mask = np.repeat(np.repeat(keep, bk, axis=0), bn, axis=1)
+    return (w * mask).astype(np.int8)
+
+
+BSR_CASES = [
+    # (m, k, n, bk, bn, density, xdtype)
+    (128, 256, 256, 128, 128, 0.5, jnp.float32),
+    (64, 512, 384, 128, 128, 0.3, jnp.float32),  # m needs padding
+    (256, 256, 512, 128, 128, 0.0, jnp.float32),  # fully pruned
+    (256, 256, 512, 128, 128, 1.0, jnp.bfloat16),  # dense
+    (128, 128, 128, 64, 64, 0.6, jnp.float32),  # small blocks
+    (32, 768, 256, 128, 128, 0.25, jnp.bfloat16),
+    (128, 512, 256, 256, 128, 0.5, jnp.float32),  # rectangular blocks
+]
+
+
+@pytest.mark.parametrize("m,k,n,bk,bn,density,xdtype", BSR_CASES)
+def test_bsr_matmul_vs_ref(m, k, n, bk, bn, density, xdtype):
+    rng = np.random.default_rng(42 + m + k + n)
+    w = _sparse_weight(rng, k, n, bk, bn, density)
+    bsr = pack_bsr(w, bk, bn)
+    scales = np.full(bsr.row_idx.shape, 1.0 / 8, np.float32)
+    x = jnp.asarray(rng.standard_normal((m, k)), xdtype)
+
+    got = bsr_matmul(x, jnp.asarray(bsr.blocks), jnp.asarray(scales),
+                     jnp.asarray(bsr.row_idx), jnp.asarray(bsr.nnz),
+                     bm=min(128, m), interpret=True)
+    want = ref.bsr_matmul_ref(x, bsr.blocks, scales, bsr.row_idx, bsr.nnz)
+    tol = 2e-2 if xdtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_bsr_zero_blocks_never_counted():
+    """Padding slots must contribute exactly nothing (the CIM skip)."""
+    rng = np.random.default_rng(0)
+    w = _sparse_weight(rng, 256, 256, 128, 128, 0.5)
+    bsr = pack_bsr(w, 128, 128)
+    # poison the padding slots: kernel must mask them via nnz
+    blocks = np.array(bsr.blocks)
+    for j in range(blocks.shape[0]):
+        blocks[j, bsr.nnz[j]:] = 99
+    scales = np.full(bsr.row_idx.shape, 1.0, np.float32)
+    x = jnp.asarray(rng.standard_normal((128, 256)), jnp.float32)
+    got = bsr_matmul(x, jnp.asarray(blocks), jnp.asarray(scales),
+                     jnp.asarray(bsr.row_idx), jnp.asarray(bsr.nnz), interpret=True)
+    want = ref.bsr_matmul_ref(x, bsr.blocks, scales, bsr.row_idx, bsr.nnz)
+    # poison leakage would show up at O(99 * |x|); accumulation-order noise
+    # is ~1e-6 relative - tolerance separates the two by 5 orders
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+QM_CASES = [
+    (128, 256, 256, jnp.float32),
+    (100, 200, 300, jnp.float32),  # all dims need padding
+    (256, 128, 512, jnp.bfloat16),
+    (64, 384, 128, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("m,k,n,xdtype", QM_CASES)
+def test_quant_matmul_vs_ref(m, k, n, xdtype):
+    rng = np.random.default_rng(m * 7 + n)
+    w = rng.integers(-127, 128, size=(k, n)).astype(np.int8)
+    scale = (rng.random(n) * 0.1 + 0.01).astype(np.float32)
+    x = jnp.asarray(rng.standard_normal((m, k)), xdtype)
+    got = quant_matmul(x, jnp.asarray(w), jnp.asarray(scale), interpret=True)
+    want = ref.quant_matmul_ref(x, w, scale)
+    tol = 5e-2 if xdtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("signed", [False, True])
+@pytest.mark.parametrize("shape", [(64, 64), (3, 100, 130), (513,)])
+def test_fake_quant_vs_ref(bits, signed, shape):
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.standard_normal(shape) * 1.5, jnp.float32)
+    if len(shape) == 1:
+        x = x[None]
+    got = fake_quant(x, bits, signed=signed, interpret=True)
+    want = ref.fake_quant_ref(x, bits, signed=signed)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-7)
+
+
+def test_pack_for_kernel_end_to_end():
+    """eq.8 weights -> int8 packing -> kernel == float matmul with the
+    quantized weights (the deployment path)."""
+    from repro.core import quant as Q
+
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (256, 256))
+    wq = Q.mars_weight_quant(w, 4, group_size=128)
+    # impose block sparsity
+    mask = np.zeros((256, 256), np.float32)
+    mask[:128, :] = 1.0
+    wq = jnp.asarray(np.asarray(wq) * mask)
+    packed = ops.pack_for_kernel(np.asarray(wq), bits=4, bk=128, bn=128)
+    assert packed["density"] == 0.5
+    x = jax.random.normal(jax.random.PRNGKey(4), (64, 256))
+    got = ops.bsr_matmul(x, packed, interpret=True)
+    want = x @ wq
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+SSD_CASES = [
+    # (C, H, l, N, P, dtype)
+    (4, 2, 64, 16, 32, jnp.float32),
+    (2, 3, 128, 32, 64, jnp.float32),
+    (1, 1, 16, 8, 8, jnp.float32),
+    (3, 2, 64, 16, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("C,H,l,N,P,dtype", SSD_CASES)
+def test_ssd_intra_vs_ref(C, H, l, N, P, dtype):
+    """Fused SSD intra-chunk kernel == oracle (the §Perf mamba2 fix)."""
+    rng = np.random.default_rng(C * 10 + l)
+    a = jnp.asarray(-np.abs(rng.standard_normal((C, H, l))) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((C, l, N)) * 0.3, dtype)
+    c = jnp.asarray(rng.standard_normal((C, l, N)) * 0.3, dtype)
+    x = jnp.asarray(rng.standard_normal((C, l, H, P)) * 0.3, dtype)
+    got = ops.ssd_intra(a, b, c, x, interpret=True)
+    want = ref.ssd_intra_ref(a, b, c, x)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_ssd_intra_matches_ssd_chunked_diag():
+    """Kernel equals the y_diag term of the pure-JAX ssd_chunked (h0=0,
+    single chunk -> full output is the diagonal block)."""
+    from repro.models.ssm import ssd_chunked
+
+    rng = np.random.default_rng(0)
+    B, S, H, P, N = 2, 64, 2, 16, 8
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)) * 0.3, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.standard_normal((B, S, H))) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, N)) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((B, S, N)) * 0.3, jnp.float32)
+    want, _ = ssd_chunked(x, a, b, c, chunk=S)  # one chunk: y == y_diag
+    got = ops.ssd_intra(a.transpose(0, 2, 1)[:, :, :], b, c, x, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,89 @@
+"""Correctness of the beyond-paper performance path (EXPERIMENTS.md §Perf):
+chunked online-softmax attention and TP head padding must be numerically
+equivalent to the baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models import registry
+
+
+@pytest.mark.parametrize("window", [0, 48])
+@pytest.mark.parametrize("kv", [2, 4])
+def test_chunked_attention_matches_full(window, kv):
+    key = jax.random.PRNGKey(0)
+    B, S, H, dh = 2, 128, 4, 16
+    q = jax.random.normal(key, (B, S, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, kv, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, kv, dh))
+    mask = L.causal_mask(S, S, window)
+    want = L.attention_scores(q, L._expand_kv(k, H), L._expand_kv(v, H), mask)
+    for chunk in (32, 48, 128):  # 48 exercises ragged padding
+        got = L.chunked_attention(q, k, v, H, chunk, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"chunk={chunk} window={window}")
+
+
+def test_head_padding_forward_identical():
+    """head_pad zero-inits the padded Q/KV slices -> same train loss."""
+    base = registry.get_smoke_config("llava-next-34b", dtype="float32")
+    # smoke config: 4 heads / 2 kv; pad to 6/3-ish via head_pad=3 -> 6 heads
+    padded = registry.get_smoke_config("llava-next-34b", dtype="float32",
+                                       head_pad=3)
+    assert padded.n_heads_eff == 6 and padded.n_heads == 4
+    fns = registry.model_fns(base)
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (2, 16), 0, base.vocab),
+        "patch_embeds": jax.random.normal(key, (2, base.n_patches, base.d_model)) * 0.02,
+    }
+    p_base = fns.init_params(base, key)
+    p_pad = fns.init_params(padded, key)
+    # graft the base weights into the padded layout (pad slices stay zero)
+    dh = base.dh
+    for name, n_true in [("wq", base.n_heads), ("wk", base.n_kv_heads),
+                         ("wv", base.n_kv_heads)]:
+        w = np.array(p_pad["layers"][name])
+        w[:, :, : n_true * dh] = np.asarray(p_base["layers"][name])
+        w[:, :, n_true * dh:] = 0.0
+        p_pad["layers"][name] = jnp.asarray(w)
+    wo = np.zeros(np.asarray(p_pad["layers"]["wo"]).shape, np.float32)
+    wo[:, : base.n_heads * dh, :] = np.asarray(p_base["layers"]["wo"])
+    p_pad["layers"]["wo"] = jnp.asarray(wo)
+    for k2 in ("embed", "head", "final_ln", "mm_proj"):
+        p_pad[k2] = p_base[k2]
+    for k2 in ("ln1", "ln2", "w_gate", "w_up", "w_down"):
+        p_pad["layers"][k2] = p_base["layers"][k2]
+
+    l_base = fns.train_loss(p_base, batch, base)
+    l_pad = fns.train_loss(p_pad, batch, padded)
+    np.testing.assert_allclose(float(l_base), float(l_pad), rtol=1e-5)
+
+
+def test_chunked_train_loss_matches():
+    cfg0 = registry.get_smoke_config("yi-6b", dtype="float32")
+    cfg1 = registry.get_smoke_config("yi-6b", dtype="float32", attn_chunk=8)
+    fns = registry.model_fns(cfg0)
+    key = jax.random.PRNGKey(0)
+    params = fns.init_params(cfg0, key)
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg0.vocab)}
+    l0 = fns.train_loss(params, batch, cfg0)
+    l1 = fns.train_loss(params, batch, cfg1)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+def test_moe_group_size_invariant():
+    cfg0 = registry.get_smoke_config("phi3.5-moe-42b-a6.6b", dtype="float32",
+                                     capacity_factor=16.0)
+    cfg1 = registry.get_smoke_config("phi3.5-moe-42b-a6.6b", dtype="float32",
+                                     capacity_factor=16.0, moe_group_size=8)
+    fns = registry.model_fns(cfg0)
+    key = jax.random.PRNGKey(0)
+    params = fns.init_params(cfg0, key)
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg0.vocab)}
+    l0 = fns.train_loss(params, batch, cfg0)
+    l1 = fns.train_loss(params, batch, cfg1)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-4)

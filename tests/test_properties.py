@@ -1,0 +1,161 @@
+"""Hypothesis property tests for the MARS core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mapping as M
+from repro.core import quant as Q
+from repro.core import sparsity as S
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 index codes
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(first=st.integers(0, 1), total=st.integers(0, 63),
+       spatial=st.integers(0, 15), channel=st.integers(0, 31))
+def test_index_code_roundtrip(first, total, spatial, channel):
+    code = M.encode_index(first, total, spatial, channel)
+    assert 0 <= code < 2**16  # fits the 16-bit Index SRAM word
+    assert M.decode_index(code) == (first, total, spatial, channel)
+
+
+# ---------------------------------------------------------------------------
+# Group-set packing (Fig. 5b)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    gi=st.integers(1, 6), go=st.integers(1, 4),
+    density=st.floats(0.0, 1.0), seed=st.integers(0, 2**16),
+)
+def test_pack_groupsets_roundtrip(gi, go, density, seed):
+    rng = np.random.default_rng(seed)
+    d_in, d_out = gi * 16, go * 16
+    keep = rng.random((gi, go)) < density
+    w = rng.standard_normal((d_in, d_out)).astype(np.float32)
+    w *= np.repeat(np.repeat(keep, 16, 0), 16, 1)
+    p = M.pack_groupsets(w, alpha=16)
+    assert p.nnz == int(keep.sum())
+    assert p.index_bits == 16 * p.nnz  # one 16-bit code per surviving set
+    back = M.unpack_groupsets(p, d_in, d_out, alpha=16)
+    np.testing.assert_array_equal(back, w)
+
+
+@settings(**SETTINGS)
+@given(
+    gi=st.integers(1, 5), go=st.integers(1, 5),
+    density=st.floats(0.0, 1.0), seed=st.integers(0, 2**16),
+    bk=st.sampled_from([8, 16]), bn=st.sampled_from([8, 16]),
+)
+def test_pack_bsr_roundtrip(gi, go, density, seed, bk, bn):
+    rng = np.random.default_rng(seed)
+    keep = rng.random((gi, go)) < density
+    w = rng.standard_normal((gi * bk, go * bn)).astype(np.float32)
+    w *= np.repeat(np.repeat(keep, bk, 0), bn, 1)
+    bsr = M.pack_bsr(w, bk, bn)
+    np.testing.assert_array_equal(M.bsr_to_dense(bsr), w)
+    assert abs(bsr.density - keep.mean()) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Quantizers (eqs. 5-8)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**16))
+def test_weight_quant_levels_and_range(bits, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((32, 32)) * 3, jnp.float32)
+    wq = np.asarray(Q.mars_weight_quant(w, bits, group_size=16))
+    qmax = 2 ** (bits - 1) - 1
+    levels = np.unique(np.round(wq * 2 ** (bits - 1)))
+    assert levels.size <= 2 * qmax + 1  # {-qmax..qmax}: implementable on macro
+    assert np.abs(wq).max() <= qmax / 2 ** (bits - 1) + 1e-7
+    # every output is exactly on the k/2^{b-1} hardware grid (int levels)
+    np.testing.assert_allclose(wq * 2 ** (bits - 1),
+                               np.round(wq * 2 ** (bits - 1)), atol=1e-6)
+    # NOTE eq.8 is intentionally NOT idempotent: the grid is k/2^{b-1} while
+    # the scale is (2^{b-1}-1) - matching the paper's macro exactly.
+
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**16),
+       signed=st.booleans())
+def test_activation_quant_grid(bits, seed, signed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal(256) * 2, jnp.float32)
+    aq = np.asarray(Q.quantize_activation(a, bits, signed))
+    denom = 2.0**bits if not signed else 2.0 ** (bits - 1)
+    np.testing.assert_allclose(aq * denom, np.round(aq * denom), atol=1e-6)
+    if signed:
+        assert np.abs(aq).max() <= 1.0
+    else:
+        assert aq.min() >= 0.0 and aq.max() <= (2**bits - 1) / 2**bits
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([4, 8]))
+def test_ste_gradient_is_clip_mask(seed, bits):
+    """STE backward of eq.5 == gradient of clamp (1 inside, 0 outside)."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal(64) * 2, jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(Q.quantize_activation(x, bits)))(a)
+    inside = (np.asarray(a) > 0) & (np.asarray(a) < 1)
+    scale = (2.0**bits - 1.0) / 2.0**bits
+    np.testing.assert_allclose(np.asarray(g), inside * scale, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Group lasso / pruning structure (eqs. 3-4)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), c=st.floats(0.1, 10.0))
+def test_group_lasso_homogeneous(seed, c):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    r1 = float(S.group_lasso_2d(w, 16, 16))
+    rc = float(S.group_lasso_2d(c * w, 16, 16))
+    assert r1 >= 0
+    np.testing.assert_allclose(rc, c * r1, rtol=1e-4)
+    assert float(S.group_lasso_2d(jnp.zeros((64, 64)), 16, 16)) < 1e-6
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16),
+       target=st.floats(0.1, 0.95),
+       n=st.sampled_from([4, 8, 16]), alpha=st.sampled_from([8, 16]))
+def test_prune_mask_is_tile_structured(seed, target, n, alpha):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    mask = np.asarray(S.prune_mask_2d(w, n, alpha, target))
+    tiles = mask.reshape(64 // n, n, 64 // alpha, alpha).transpose(0, 2, 1, 3)
+    per_tile = tiles.reshape(tiles.shape[0], tiles.shape[1], -1)
+    # every tile is uniformly 0 or 1 - the CIM-skippable structure
+    assert np.all((per_tile.min(-1) == per_tile.max(-1)))
+    # achieved tile sparsity >= requested quantile (ties can exceed)
+    zero_frac = 1.0 - per_tile.max(-1).mean()
+    assert zero_frac >= target - 0.15
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_storage_accounting_consistent(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    mask = S.prune_mask_2d(w, 16, 16, 0.5)
+    zg = float(S.zero_groupset_proportion(mask, 16, 16))
+    idx_bits = int(S.index_storage_bits(mask, 16, 16))
+    n_sets = (64 // 16) * (64 // 16)
+    assert idx_bits == 16 * round((1 - zg) * n_sets)
