@@ -8,6 +8,7 @@ import time
 
 MODULES = [
     "table1_perf",
+    "sched_bench",
     "table4_memory",
     "fig10_speedup",
     "fig11_access",

@@ -1,0 +1,75 @@
+"""Analytic vs event-driven-simulated vs searched-mapping throughput.
+
+Three numbers per network (VGG16/ResNet18-CIFAR, w8a4 and w8a8):
+
+  * ``fps_analytic``  - the closed-form ``perf_model.summarize``;
+  * ``fps_sim``       - the event-driven simulator on the paper's 16x16
+    mapping (pipeline on), plus the no-pipeline cross-validation ratio
+    against the analytic dense baseline;
+  * ``fps_searched``  - the best mapping the grid search finds.
+
+Results are also written to ``BENCH_sched.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import perf_model as PM
+from repro import sched
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sched.json")
+
+NETWORKS = [
+    ("vgg16", PM.vgg16_cifar_layers, sched.vgg16_graph),
+    ("resnet18", PM.resnet18_cifar_layers, sched.resnet18_graph),
+]
+
+
+def run():
+    rows = []
+    report = {}
+    for net, layers_fn, graph_fn in NETWORKS:
+        graph = graph_fn()
+        for (w, a) in [(8, 4), (8, 8)]:
+            analytic = PM.summarize(layers_fn(), w, a)
+            sim = sched.simulate(graph, w_bits=w, a_bits=a, pipeline=True)
+            cv = sched.cross_validate(layers_fn(), w_bits=w, a_bits=a,
+                                      dense=True)
+            search = sched.search_mapping(graph, w_bits=w, a_bits=a)
+            schedule = sched.schedule_from_search(graph, search, w_bits=w,
+                                                  a_bits=a)
+            key = f"{net}_w{w}a{a}"
+            entry = {
+                "fps_analytic": round(analytic.fps, 1),
+                "fps_sim": round(sim.fps, 1),
+                "fps_searched": round(search.best.fps, 1),
+                "dense_sim_vs_analytic": round(cv["ratio"], 3),
+                "searched_tile": list(search.best.candidate.tile),
+                "search_speedup": round(search.speedup_vs_default, 3),
+                "core_utilization": round(sim.core_utilization, 3),
+                "schedule": schedule.to_json(),
+            }
+            report[key] = entry
+            rows.append({
+                "name": f"sched_{key}",
+                "fps_analytic": entry["fps_analytic"],
+                "fps_sim": entry["fps_sim"],
+                "fps_searched": entry["fps_searched"],
+                "dense_ratio": entry["dense_sim_vs_analytic"],
+                "tile": f"{search.best.candidate.group}x"
+                        f"{search.best.candidate.alpha}",
+                "util": entry["core_utilization"],
+            })
+    with open(os.path.abspath(OUT_PATH), "w") as f:
+        json.dump(report, f, indent=1)
+    return rows
+
+
+def main():
+    for r in run():
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

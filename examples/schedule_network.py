@@ -1,0 +1,70 @@
+"""Walkthrough: schedule a compressed network onto the MARS fabric.
+
+Five steps, mirroring the ``repro.sched`` pipeline:
+  1. extract the layer DAG from the network definition;
+  2. allocate each layer's surviving group-sets onto 4 cores x 2 macros;
+  3. simulate the schedule event-by-event (vs the closed-form model);
+  4. search the mapping space for a faster tiling;
+  5. execute one scheduled layer on the real Pallas BSR kernel path and
+     check the numerics never moved.
+
+Run: PYTHONPATH=src python examples/schedule_network.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import sched
+from repro.core import perf_model as PM
+from repro.core.cim_layer import CIMConfig
+from repro.core.quant import QuantConfig
+from repro.core.sparsity import SparsityConfig
+
+
+def main():
+    # 1. layer DAG for VGG16-CIFAR with the paper's Table IV sparsity
+    graph = sched.vgg16_graph()
+    order = graph.topo_order()
+    print(f"[1] graph: {len(graph.nodes)} layers, "
+          f"{sum(l.macs for l in graph.layers())/1e6:.0f} MMACs/frame")
+
+    # 2. allocate the largest layer and inspect the placement
+    name = order[-1]
+    alloc = sched.allocate_node(graph.nodes[name])
+    print(f"[2] {name}: {alloc.nnz_total} surviving group-sets -> "
+          f"loads {[a.nnz for a in alloc.assignments]}, "
+          f"{alloc.reload_waves} reload waves, "
+          f"imbalance {alloc.imbalance:.2f} "
+          f"(conserved: {sched.verify_conservation(alloc)})")
+
+    # 3. event-driven simulation vs the closed-form model
+    analytic = PM.summarize(PM.vgg16_cifar_layers())
+    sim = sched.simulate(graph, pipeline=True)
+    print(f"[3] analytic {analytic.fps:.0f} fps | simulated "
+          f"{sim.fps:.0f} fps ({len(sim.events)} events, "
+          f"{sim.core_utilization:.0%} core util)")
+
+    # 4. mapping search over tile shapes
+    result = sched.search_mapping(graph)
+    best = result.best.candidate
+    print(f"[4] search: best tile {best.group}x{best.alpha} -> "
+          f"{result.best.fps:.0f} fps "
+          f"({result.speedup_vs_default:.2f}x vs default mapping)")
+    schedule = sched.schedule_from_search(graph, result)
+
+    # 5. run one scheduled layer through deploy_weight -> deployed_matmul
+    cim = CIMConfig(
+        quant=QuantConfig(w_bits=8, a_bits=8, group_size=16, a_signed=True),
+        sparsity=SparsityConfig(alpha=16, n=16, target_sparsity=0.5),
+        mode="qat")
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (128, 64))) * 0.2
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (8, 128)))
+    layer = dataclasses.replace(schedule.layers[0], name="demo_proj")
+    err = sched.verify_layer(x, w, layer, cim, target_sparsity=0.5)
+    print(f"[5] scheduled kernel execution matches the dense oracle "
+          f"(max err {err:.2e})")
+
+
+if __name__ == "__main__":
+    main()

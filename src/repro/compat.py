@@ -1,0 +1,20 @@
+"""Version-compatibility shims for the jax API surface the repo uses.
+
+jax moved ``shard_map`` from ``jax.experimental.shard_map`` (0.4.x, with a
+``check_rep`` kwarg) to the top level (>= 0.6, with ``check_vma``). Import
+``shard_map`` from here; it accepts the new-style ``check_vma`` kwarg on
+both versions.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.6
+    from jax import shard_map as _shard_map
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})

@@ -177,8 +177,11 @@ def pack_bsr(w: np.ndarray, bk: int, bn: int, nnz_max: int | None = None) -> Bsr
 def bsr_to_dense(bw: BsrWeight) -> np.ndarray:
     w = np.zeros((bw.d_in, bw.d_out), dtype=bw.blocks.dtype)
     go = bw.d_out // bw.bn
+    nnz_max = bw.row_idx.shape[1]
     for j in range(go):
-        for s in range(int(bw.nnz[j])):
+        # nnz holds TRUE counts, which exceed the stored slots when the
+        # packing was truncated with an explicit nnz_max
+        for s in range(min(int(bw.nnz[j]), nnz_max)):
             i = int(bw.row_idx[j, s])
             w[i * bw.bk : (i + 1) * bw.bk, j * bw.bn : (j + 1) * bw.bn] = bw.blocks[j, s]
     return w

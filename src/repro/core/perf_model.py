@@ -45,6 +45,53 @@ N_MACROS = CORES * MACROS_PER_CORE
 
 
 @dataclasses.dataclass(frozen=True)
+class HardwareConfig:
+    """The MARS fabric as data - shared hardware description for this
+    analytic model and the event-driven simulator (``repro.sched``)."""
+
+    cores: int = CORES
+    macros_per_core: int = MACROS_PER_CORE
+    partitions: int = 8  # per macro ([18])
+    macro_bits: int = MACRO_BITS
+    group: int = GROUP  # weights per weight-group (input direction)
+    alpha: int = ALPHA  # kernels per group-set (output direction)
+    cim_freq: float = CIM_FREQ
+    sys_freq: float = SYS_FREQ
+    reload_bits_per_cycle: int = RELOAD_BITS_PER_CYCLE
+    ctrl_overhead: float = CTRL_OVERHEAD
+    pass_overlap: float = PASS_OVERLAP
+    macro_power_w: float = MACRO_POWER_W
+
+    @property
+    def n_macros(self) -> int:
+        return self.cores * self.macros_per_core
+
+    def pass_factor(self, w_bits: int, a_bits: int) -> float:
+        """Cycle multiplier for multi-pass >4-bit operands on the 4-bit macro."""
+        a_pass = max(1, -(-a_bits // 4))
+        w_pass = max(1, -(-w_bits // 4))
+        return (1 + self.pass_overlap * (a_pass - 1)) * (
+            1 + self.pass_overlap * (w_pass - 1))
+
+    def capacity_groupsets(self, w_bits: int = 8, group: int | None = None,
+                           alpha: int | None = None, macros: int = 1) -> int:
+        """Group-sets resident in ``macros`` macro buffers of one core."""
+        g = self.group if group is None else group
+        a = self.alpha if alpha is None else alpha
+        return max(1, (self.macro_bits * macros) // (g * a * w_bits))
+
+    def reload_cycles(self, groupsets: int, w_bits: int = 8,
+                      group: int | None = None, alpha: int | None = None) -> float:
+        """Cycles for one core's write port to fill ``groupsets`` group-sets."""
+        g = self.group if group is None else group
+        a = self.alpha if alpha is None else alpha
+        return groupsets * g * a * w_bits / self.reload_bits_per_cycle
+
+
+DEFAULT_HW = HardwareConfig()
+
+
+@dataclasses.dataclass(frozen=True)
 class ConvLayer:
     """One conv layer: kernel (kh, kw), cin -> cout, output h x w."""
 
@@ -62,12 +109,34 @@ class ConvLayer:
 
     @property
     def groupsets(self) -> int:
-        wg_per_kernel = self.kh * self.kw * -(-self.cin // GROUP)
-        return wg_per_kernel * -(-self.cout // ALPHA)
+        return self.groupsets_for(GROUP, ALPHA)
 
     @property
     def nnz_groupsets(self) -> int:
-        return max(1, int(round(self.groupsets * (1.0 - self.sparsity_gs))))
+        return self.nnz_for(GROUP, ALPHA)
+
+    def groupsets_for(self, group: int, alpha: int) -> int:
+        """Group-set count under an alternative (group x alpha) tiling."""
+        wg_per_kernel = self.kh * self.kw * -(-self.cin // group)
+        return wg_per_kernel * -(-self.cout // alpha)
+
+    def zero_fraction_for(self, group: int, alpha: int) -> float:
+        """Zero-group-set fraction rescaled from the (GROUP x ALPHA) profile.
+
+        ``sparsity_gs`` is measured at the paper's 16x16 tiles; a coarser
+        tile is zero only when all covered 16x16 tiles are, a finer one is
+        zero at least as often - modeled as p**(area ratio) (independent
+        tiles), the same scaling CIM-Tuner-style searches assume.
+        """
+        if self.sparsity_gs <= 0.0:
+            return 0.0
+        ratio = (group * alpha) / float(GROUP * ALPHA)
+        return min(1.0, float(self.sparsity_gs) ** ratio)
+
+    def nnz_for(self, group: int, alpha: int) -> int:
+        total = self.groupsets_for(group, alpha)
+        keep = 1.0 - self.zero_fraction_for(group, alpha)
+        return max(1, int(round(total * keep)))
 
     @property
     def macs(self) -> int:
@@ -91,32 +160,38 @@ class LayerPerf:
         return self.fm_access_dense / max(self.fm_access_mars, 1e-9)
 
 
-def _layer_cycles(l: ConvLayer, nnz: int, w_bits: int, a_bits: int,
-                  sparse_fetch: bool) -> tuple[float, float]:
-    a_pass = max(1, -(-a_bits // 4))
-    w_pass = max(1, -(-w_bits // 4))
-    pass_f = (1 + PASS_OVERLAP * (a_pass - 1)) * (1 + PASS_OVERLAP * (w_pass - 1))
-    compute = l.out_pixels * nnz * pass_f / CORES
-    # IFM: one 16-wide fetch per (pixel, surviving group-set); OFM: one
+def _layer_cycles(l: ConvLayer, nnz: int, total_gs: int, w_bits: int,
+                  a_bits: int, sparse_fetch: bool,
+                  hw: HardwareConfig = DEFAULT_HW) -> tuple[float, float]:
+    pass_f = hw.pass_factor(w_bits, a_bits)
+    compute = l.out_pixels * nnz * pass_f / hw.cores
+    # IFM: one group-wide fetch per (pixel, surviving group-set); OFM: one
     # partial-sum write per (pixel, kernel-group) - zero rows still skipped
     # only on the sparse path.
-    fetch_gs = nnz if sparse_fetch else l.groupsets
+    fetch_gs = nnz if sparse_fetch else total_gs
     ifm = l.out_pixels * fetch_gs
-    ofm = l.out_pixels * -(-l.cout // ALPHA)
-    fm_cycles = (ifm + ofm) / CORES
-    stored_bits = (nnz if sparse_fetch else l.groupsets) * GROUP * ALPHA * w_bits
-    reload = stored_bits / (RELOAD_BITS_PER_CYCLE * CORES)
-    cycles = max(compute, fm_cycles) + reload + CTRL_OVERHEAD * l.out_pixels
+    ofm = l.out_pixels * -(-l.cout // hw.alpha)
+    fm_cycles = (ifm + ofm) / hw.cores
+    stored_bits = fetch_gs * hw.group * hw.alpha * w_bits
+    reload = stored_bits / (hw.reload_bits_per_cycle * hw.cores)
+    cycles = max(compute, fm_cycles) + reload + hw.ctrl_overhead * l.out_pixels
     return cycles, ifm + ofm
 
 
 def evaluate_network(
-    layers: Sequence[ConvLayer], w_bits: int = 8, a_bits: int = 4
+    layers: Sequence[ConvLayer], w_bits: int = 8, a_bits: int = 4,
+    hw: HardwareConfig = DEFAULT_HW,
 ) -> List[LayerPerf]:
     out = []
     for i, l in enumerate(layers):
-        cd, fmd = _layer_cycles(l, l.groupsets, w_bits, a_bits, sparse_fetch=False)
-        cm, fmm = _layer_cycles(l, l.nnz_groupsets, w_bits, a_bits, sparse_fetch=True)
+        # group-set counts follow the hw tiling, so a HardwareConfig with a
+        # non-default (group, alpha) stays internally consistent
+        total = l.groupsets_for(hw.group, hw.alpha)
+        nnz = l.nnz_for(hw.group, hw.alpha)
+        cd, fmd = _layer_cycles(l, total, total, w_bits, a_bits,
+                                sparse_fetch=False, hw=hw)
+        cm, fmm = _layer_cycles(l, nnz, total, w_bits, a_bits,
+                                sparse_fetch=True, hw=hw)
         out.append(LayerPerf(f"L{i}_{l.kh}x{l.kw}x{l.cin}x{l.cout}", cd, cm, fmd, fmm))
     return out
 
@@ -132,24 +207,23 @@ class NetworkPerf:
     layers: List[LayerPerf]
 
 
-def summarize(layers: Sequence[ConvLayer], w_bits: int = 8, a_bits: int = 4) -> NetworkPerf:
-    perf = evaluate_network(layers, w_bits, a_bits)
+def summarize(layers: Sequence[ConvLayer], w_bits: int = 8, a_bits: int = 4,
+              hw: HardwareConfig = DEFAULT_HW) -> NetworkPerf:
+    perf = evaluate_network(layers, w_bits, a_bits, hw=hw)
     cyc_m = sum(p.cycles_mars for p in perf)
     cyc_d = sum(p.cycles_dense for p in perf)
-    fps = CIM_FREQ / cyc_m
-    fps_dense = CIM_FREQ / cyc_d
+    fps = hw.cim_freq / cyc_m
+    fps_dense = hw.cim_freq / cyc_d
     total_ops = 2.0 * sum(l.macs for l in layers)  # MAC = 2 OPS
     avg_gops = fps * total_ops / 1e9
     # Macro-level efficiency: ops attributed to macros / macro power. The
     # paper reports dense-equivalent ops (skipped zeros count), as is
     # standard for sparse accelerators.
-    macro_tops_w = (fps * total_ops) / (N_MACROS * MACRO_POWER_W) / 1e12
-    a_pass = max(1, -(-a_bits // 4))
-    w_pass = max(1, -(-w_bits // 4))
-    pass_f = (1 + PASS_OVERLAP * (a_pass - 1)) * (1 + PASS_OVERLAP * (w_pass - 1))
-    peak_dense_ops = 2 * GROUP * ALPHA * CORES * CIM_FREQ / pass_f
+    macro_tops_w = (fps * total_ops) / (hw.n_macros * hw.macro_power_w) / 1e12
+    pass_f = hw.pass_factor(w_bits, a_bits)
+    peak_dense_ops = 2 * hw.group * hw.alpha * hw.cores * hw.cim_freq / pass_f
     best_density = min(max(1e-3, 1.0 - l.sparsity_gs) for l in layers)
-    peak = peak_dense_ops / best_density / (N_MACROS * MACRO_POWER_W) / 1e12
+    peak = peak_dense_ops / best_density / (hw.n_macros * hw.macro_power_w) / 1e12
     return NetworkPerf(fps, fps_dense, cyc_d / cyc_m, avg_gops, macro_tops_w, peak, perf)
 
 

@@ -1,0 +1,30 @@
+"""repro.sched - multi-macro scheduling & event-driven CIM simulation.
+
+The pipeline: extract a layer DAG from a model config (``graph``), place
+surviving group-sets onto the 4 cores x 2 macros fabric (``allocate``),
+simulate the schedule event-by-event (``simulate``), search the mapping
+space for a faster tiling (``search``), and execute the winner on the real
+Pallas BSR path with the same artifact (``executor``).
+"""
+from .allocate import (CoreAssignment, LayerAllocation, allocate_counts,
+                       allocate_node, allocate_packing, verify_conservation)
+from .graph import (LayerGraph, LayerNode, attach_weights, graph_from_layers,
+                    lm_graph, resnet18_graph, vgg16_graph)
+from .executor import (LayerSchedule, NetworkSchedule, build_schedule,
+                       deploy_layer, execute_layer, execute_network,
+                       schedule_from_search, verify_layer)
+from .search import (CandidateResult, MappingCandidate, SearchResult,
+                     default_candidate, greedy_search, search_mapping)
+from .simulate import SimEvent, SimResult, cross_validate, simulate
+
+__all__ = [
+    "CoreAssignment", "LayerAllocation", "allocate_counts", "allocate_node",
+    "allocate_packing", "verify_conservation",
+    "LayerGraph", "LayerNode", "attach_weights", "graph_from_layers",
+    "lm_graph", "resnet18_graph", "vgg16_graph",
+    "LayerSchedule", "NetworkSchedule", "build_schedule", "deploy_layer",
+    "execute_layer", "execute_network", "schedule_from_search", "verify_layer",
+    "CandidateResult", "MappingCandidate", "SearchResult",
+    "default_candidate", "greedy_search", "search_mapping",
+    "SimEvent", "SimResult", "cross_validate", "simulate",
+]

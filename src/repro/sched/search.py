@@ -1,0 +1,127 @@
+"""Mapping search: grid/greedy co-exploration of the compression tiling.
+
+CIM-Tuner's observation, applied to MARS: the (group x alpha) tile shape is
+simultaneously (a) the pruning granularity, (b) the macro storage quantum,
+and (c) the TPU kernel's block shape - so changing it trades skip
+opportunity (smaller tiles -> more all-zero tiles survive pruning) against
+per-cycle parallelism and index overhead (smaller tiles -> more tiles, more
+codes, more reload waves). The search simulates each candidate tiling on
+the event-driven model and returns the best schedule; the paper's own
+16x16 mapping is always in the candidate set, so the result is never worse
+than the default.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from ..core.perf_model import DEFAULT_HW, HardwareConfig
+
+from .graph import LayerGraph
+from .simulate import SimResult, simulate
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingCandidate:
+    """One point in the mapping space."""
+
+    group: int  # weight-group size (input direction) = kernel bk
+    alpha: int  # kernels per group-set (output direction) = kernel bn
+    pipeline: bool = True
+
+    @property
+    def tile(self) -> Tuple[int, int]:
+        return (self.group, self.alpha)
+
+
+@dataclasses.dataclass
+class CandidateResult:
+    candidate: MappingCandidate
+    fps: float
+    cycles: float
+    core_utilization: float
+
+    def row(self) -> dict:
+        return {
+            "group": self.candidate.group,
+            "alpha": self.candidate.alpha,
+            "pipeline": self.candidate.pipeline,
+            "fps": round(self.fps, 2),
+            "cycles": round(self.cycles, 1),
+            "core_utilization": round(self.core_utilization, 4),
+        }
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best: CandidateResult
+    default: CandidateResult
+    table: List[CandidateResult]
+
+    @property
+    def speedup_vs_default(self) -> float:
+        return self.best.fps / max(self.default.fps, 1e-9)
+
+
+def default_candidate(hw: HardwareConfig = DEFAULT_HW,
+                      pipeline: bool = True) -> MappingCandidate:
+    return MappingCandidate(hw.group, hw.alpha, pipeline)
+
+
+def search_mapping(graph: LayerGraph, hw: HardwareConfig = DEFAULT_HW,
+                   w_bits: int = 8, a_bits: int = 4,
+                   groups: Sequence[int] = (8, 16, 32),
+                   alphas: Sequence[int] = (8, 16, 32),
+                   pipeline: bool = True,
+                   budget: Optional[int] = None) -> SearchResult:
+    """Grid search over tile shapes; ``budget`` caps simulated candidates
+    (the default mapping never counts against it)."""
+    cands = [default_candidate(hw, pipeline)]
+    for g in groups:
+        for a in alphas:
+            c = MappingCandidate(g, a, pipeline)
+            if c not in cands:
+                cands.append(c)
+    if budget is not None:
+        cands = cands[: 1 + max(budget, 0)]
+
+    table: List[CandidateResult] = []
+    for c in cands:
+        res = simulate(graph, hw, w_bits, a_bits, pipeline=c.pipeline,
+                       group=c.group, alpha=c.alpha, keep_events=True)
+        table.append(CandidateResult(c, res.fps, res.cycles,
+                                     res.core_utilization))
+    default = table[0]
+    best = max(table, key=lambda r: r.fps)
+    return SearchResult(best, default, table)
+
+
+def greedy_search(graph: LayerGraph, hw: HardwareConfig = DEFAULT_HW,
+                  w_bits: int = 8, a_bits: int = 4,
+                  steps: Sequence[int] = (8, 16, 32, 64),
+                  pipeline: bool = True) -> SearchResult:
+    """Coordinate-descent alternative to the full grid: optimize ``group``
+    with alpha fixed at the default, then ``alpha`` at the winning group.
+    Simulates O(2k) candidates instead of O(k^2)."""
+    table: List[CandidateResult] = []
+
+    def ev(c: MappingCandidate) -> CandidateResult:
+        for t in table:
+            if t.candidate == c:
+                return t
+        res = simulate(graph, hw, w_bits, a_bits, pipeline=c.pipeline,
+                       group=c.group, alpha=c.alpha)
+        r = CandidateResult(c, res.fps, res.cycles, res.core_utilization)
+        table.append(r)
+        return r
+
+    default = ev(default_candidate(hw, pipeline))
+    best = default
+    for g in steps:
+        best = max(best, ev(MappingCandidate(g, hw.alpha, pipeline)),
+                   key=lambda r: r.fps)
+    for a in steps:
+        best = max(best, ev(MappingCandidate(best.candidate.group, a,
+                                             pipeline)),
+                   key=lambda r: r.fps)
+    return SearchResult(best, default, table)

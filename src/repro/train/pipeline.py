@@ -18,7 +18,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from ..compat import shard_map
 
 
 def pipeline_apply(stage_fn: Callable, n_stages: int, mesh: Mesh,

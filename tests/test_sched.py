@@ -1,0 +1,310 @@
+"""repro.sched: graph extraction, allocation conservation, event-driven
+simulation vs the closed-form model, mapping search, schedule execution."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import sched
+from repro.core import perf_model as PM
+from repro.core.cim_layer import CIMConfig
+from repro.core.mapping import pack_groupsets
+from repro.core.perf_model import ConvLayer
+from repro.core.quant import QuantConfig
+from repro.core.sparsity import SparsityConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# graph extraction
+# ---------------------------------------------------------------------------
+
+
+def test_vgg16_graph_matches_perf_table():
+    g = sched.vgg16_graph()
+    layers = PM.vgg16_cifar_layers()
+    assert len(g.nodes) == len(layers)
+    assert [l.macs for l in g.layers()] == [l.macs for l in layers]
+    order = g.topo_order()
+    # chain: each node depends on its predecessor
+    for prev, cur in zip(order, order[1:]):
+        assert g.nodes[cur].deps == (prev,)
+
+
+def test_resnet18_graph_is_a_dag_with_skips():
+    g = sched.resnet18_graph()
+    order = g.topo_order()
+    assert len(order) == len(g.nodes)
+    # 17 chain convs + 3 downsample 1x1 convs
+    assert len(g.nodes) == 20
+    downs = [n for n in g.nodes.values() if n.layer.kh == 1]
+    assert len(downs) == 3
+    # a post-downsample conv1 must depend on BOTH producers of the stream
+    joins = [n for n in g.nodes.values() if len(n.deps) == 2]
+    assert len(joins) >= 3
+    pos = {n: i for i, n in enumerate(order)}
+    for n in g.nodes.values():
+        for d in n.deps:
+            assert pos[d] < pos[n.name]
+
+
+def test_lm_graph_projections():
+    from repro.models import registry
+
+    cfg = registry.get_smoke_config("yi-6b", dtype="float32")
+    g = sched.lm_graph(cfg, seq_len=64)
+    assert len(g.nodes) == 7 * cfg.n_layers
+    node = g.nodes["blk0_w_up"]
+    assert node.kind == "matmul"
+    assert node.layer.cin == cfg.d_model and node.layer.cout == cfg.d_ff
+    assert node.layer.out_pixels == 64
+    res = sched.simulate(g)
+    assert res.cycles > 0 and np.isfinite(res.fps)
+
+
+def test_graph_rejects_unknown_dep_and_cycle():
+    l = ConvLayer(3, 3, 16, 16, 4, 4)
+    with pytest.raises(ValueError):
+        sched.LayerGraph({"a": sched.LayerNode("a", l, deps=("ghost",))})
+    cyc = sched.LayerGraph({
+        "a": sched.LayerNode("a", l, deps=("b",)),
+        "b": sched.LayerNode("b", l, deps=("a",)),
+    })
+    with pytest.raises(ValueError):
+        cyc.topo_order()
+
+
+# ---------------------------------------------------------------------------
+# allocator conservation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.95])
+@pytest.mark.parametrize("group,alpha", [(16, 16), (8, 32), (32, 8)])
+def test_allocator_conservation(sparsity, group, alpha):
+    node = sched.LayerNode("l", ConvLayer(3, 3, 128, 256, 8, 8, sparsity))
+    alloc = sched.allocate_node(node, group=group, alpha=alpha)
+    assert sched.verify_conservation(alloc)
+    assert alloc.placed == alloc.nnz_total
+    assert alloc.nnz_total == node.layer.nnz_for(group, alpha)
+
+
+def test_allocator_balances_cores():
+    node = sched.LayerNode("l", ConvLayer(3, 3, 256, 512, 4, 4, 0.0))
+    alloc = sched.allocate_node(node)
+    loads = [a.nnz for a in alloc.assignments]
+    assert max(loads) - min(loads) <= max(1, max(loads) // 4)
+    assert alloc.imbalance < 1.34  # LPT bound
+
+
+def test_allocator_exact_counts_from_weight():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(9 * 32, 64)).astype(np.float32)
+    # zero half the 16x16 tiles exactly
+    w[: 9 * 16, :] = 0.0
+    node = sched.LayerNode("l", ConvLayer(3, 3, 32, 64, 4, 4), weight=w)
+    counts = node.kernel_group_counts(16, 16)
+    assert counts.sum() == 9 * 4  # surviving (gi=18/2) x go=4
+    alloc = sched.allocate_node(node)
+    assert alloc.nnz_total == counts.sum()
+    assert sched.verify_conservation(alloc)
+
+
+def test_allocate_from_packing_agrees_with_node_counts():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(64, 64)).astype(np.float32)
+    w[16:48, :] = 0.0
+    p = pack_groupsets(w)
+    alloc = sched.allocate_packing(p, name="packed")
+    assert alloc.nnz_total == p.nnz
+    assert sched.verify_conservation(alloc)
+
+
+def test_allocator_residency_waves():
+    # dense 512->512 3x3: 9216 group-sets, 2304/core, 32/macro -> 72 waves
+    node = sched.LayerNode("l", ConvLayer(3, 3, 512, 512, 2, 2, 0.0))
+    alloc = sched.allocate_node(node, dense=True)
+    assert alloc.capacity_per_macro == 32
+    assert alloc.reload_waves == 72
+    for a in alloc.assignments:
+        assert sum(a.waves) == a.nnz
+
+
+# ---------------------------------------------------------------------------
+# simulator vs the closed-form model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("a_bits", [4, 8])
+def test_sim_within_tolerance_of_analytic_dense_vgg16(a_bits):
+    cv = sched.cross_validate(PM.vgg16_cifar_layers(), w_bits=8,
+                              a_bits=a_bits, dense=True)
+    assert 0.75 <= cv["ratio"] <= 1.25, cv
+
+
+def test_sim_within_tolerance_of_analytic_dense_resnet18():
+    cv = sched.cross_validate(PM.resnet18_cifar_layers(), dense=True)
+    assert 0.75 <= cv["ratio"] <= 1.25, cv
+
+
+def test_sim_single_dense_layer_close_to_analytic():
+    # one compute-bound layer, no pipelining: the only divergence is the
+    # double-buffered reload, which this layer barely has
+    l = ConvLayer(3, 3, 64, 64, 32, 32, 0.0)
+    cv = sched.cross_validate([l], dense=True)
+    assert 0.9 <= cv["ratio"] <= 1.1, cv
+
+
+def test_sparse_sim_tracks_analytic_mars_path():
+    layers = PM.vgg16_cifar_layers()
+    res = sched.simulate(sched.vgg16_graph(), pipeline=False)
+    fps_analytic = PM.summarize(layers).fps
+    assert 0.75 * fps_analytic <= res.fps <= 1.25 * fps_analytic
+
+
+def test_pipeline_never_slower():
+    g = sched.vgg16_graph()
+    nopipe = sched.simulate(g, pipeline=False)
+    pipe = sched.simulate(g, pipeline=True)
+    assert pipe.cycles <= nopipe.cycles + 1e-6
+
+
+def test_sim_events_are_consistent():
+    res = sched.simulate(sched.vgg16_graph())
+    assert res.events, "event log empty"
+    for e in res.events:
+        assert e.t_end >= e.t_start >= 0.0
+    # per-core compute intervals never overlap
+    for c in range(res.hw.cores):
+        iv = sorted((e.t_start, e.t_end) for e in res.events
+                    if e.kind == "compute" and e.core == c)
+        for (s1, e1), (s2, e2) in zip(iv, iv[1:]):
+            assert s2 >= e1 - 1e-9
+    assert 0.0 < res.core_utilization <= 1.0
+
+
+def test_sim_zero_wave_layer_no_double_release():
+    # regression: an all-zero root retires inside release(); its successor
+    # must not get its waves queued twice under pipeline=False
+    z = sched.LayerNode("z", ConvLayer(3, 3, 16, 16, 4, 4),
+                        weight=np.zeros((9 * 16, 16), np.float32))
+    n = sched.LayerNode("n", ConvLayer(3, 3, 16, 16, 4, 4, 0.5), deps=("z",))
+    g = sched.LayerGraph({"z": z, "n": n})
+    res = sched.simulate(g, pipeline=False)
+    assert sum(1 for e in res.events if e.kind == "compute") == 1
+    assert res.cycles == pytest.approx(sched.simulate(g, pipeline=True).cycles)
+
+
+def test_sim_metrics_independent_of_event_log():
+    g = sched.vgg16_graph()
+    full = sched.simulate(g, keep_events=True)
+    lean = sched.simulate(g, keep_events=False)
+    assert lean.events == []
+    assert lean.core_utilization == pytest.approx(full.core_utilization)
+    for a, b in zip(full.layers, lean.layers):
+        assert a.compute_cycles == pytest.approx(b.compute_cycles)
+        assert a.reload_cycles == pytest.approx(b.reload_cycles)
+
+
+def test_analytic_model_consistent_on_nondefault_tiling():
+    # regression: summarize(hw=8x8) must count group-sets at the hw tiling;
+    # the event simulator at the same tiling should land in the same range
+    hw = PM.HardwareConfig(group=8, alpha=8)
+    analytic = PM.summarize(PM.vgg16_cifar_layers(), hw=hw)
+    sim = sched.simulate(sched.vgg16_graph(), group=8, alpha=8)
+    assert 0.75 * analytic.fps <= sim.fps <= 1.25 * analytic.fps
+
+
+def test_sim_respects_dag_dependencies():
+    res = sched.simulate(sched.resnet18_graph())
+    g = sched.resnet18_graph()
+    end = {t.name: t.t_end for t in res.layers}
+    start = {t.name: t.t_compute for t in res.layers}
+    for n in g.nodes.values():
+        for d in n.deps:
+            assert start[n.name] >= end[d] - 1e-9, (n.name, d)
+
+
+# ---------------------------------------------------------------------------
+# mapping search
+# ---------------------------------------------------------------------------
+
+
+def test_search_at_least_default():
+    g = sched.vgg16_graph()
+    r = sched.search_mapping(g, groups=(8, 16, 32), alphas=(8, 16, 32))
+    assert r.best.fps >= r.default.fps
+    assert r.default.candidate.tile == (16, 16)
+    assert len(r.table) == 9
+
+
+def test_greedy_search_at_least_default():
+    g = sched.resnet18_graph()
+    r = sched.greedy_search(g, steps=(8, 16, 32))
+    assert r.best.fps >= r.default.fps
+    assert len(r.table) <= 7  # O(2k), not O(k^2)
+
+
+# ---------------------------------------------------------------------------
+# schedule build + execution on the real kernel path
+# ---------------------------------------------------------------------------
+
+
+def _cim(ts=0.5):
+    return CIMConfig(
+        quant=QuantConfig(w_bits=8, a_bits=8, group_size=16, a_signed=True),
+        sparsity=SparsityConfig(alpha=16, n=16, target_sparsity=ts),
+        mode="qat")
+
+
+def test_build_schedule_artifact():
+    g = sched.vgg16_graph()
+    r = sched.search_mapping(g)
+    ns = sched.schedule_from_search(g, r)
+    assert len(ns.layers) == len(g.nodes)
+    j = ns.to_json()
+    assert j["fps"] == pytest.approx(ns.fps, rel=1e-2)
+    for s, name in zip(ns.layers, g.topo_order()):
+        assert s.name == name
+        assert s.nnz <= s.total_groupsets
+        assert sum(s.core_loads) == s.nnz
+        assert s.t_end >= s.t_start
+
+
+def test_scheduled_execution_roundtrip_unchanged_numerics():
+    """Acceptance: chosen schedule round-trips deploy_weight ->
+    deployed_matmul with unchanged numerics vs the dense oracle."""
+    g = sched.vgg16_graph()
+    ns = sched.schedule_from_search(g, sched.search_mapping(g))
+    cim = _cim(ts=0.5)
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (128, 64))) * 0.2
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (8, 128)))
+    layer = dataclasses.replace(ns.layers[0], name="proj")
+    err = sched.verify_layer(x, w, layer, cim, target_sparsity=0.5)
+    assert err == 0.0
+
+
+def test_execute_layer_ragged_tile_falls_back_to_divisor():
+    # d_in=96 is not divisible by a 32-wide tile; executor must pick a
+    # valid (bk, bn) rather than crash in pack_bsr
+    ls = sched.LayerSchedule("rag", group=32, alpha=32, nnz=1,
+                             total_groupsets=1, reload_waves=1,
+                             imbalance=1.0, core_loads=[1, 0, 0, 0])
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (96, 48))) * 0.2
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (4, 96)))
+    err = sched.verify_layer(x, w, ls, _cim(0.25), target_sparsity=0.25)
+    assert err == 0.0
+
+
+def test_end_to_end_vgg16_acceptance():
+    """The ISSUE acceptance bundle in one test: simulate VGG16-CIFAR
+    end-to-end, dense sim within 25% of analytic, search >= default."""
+    cv = sched.cross_validate(PM.vgg16_cifar_layers(), dense=True)
+    assert abs(cv["ratio"] - 1.0) <= 0.25
+    g = sched.vgg16_graph()
+    r = sched.search_mapping(g)
+    assert r.best.fps >= r.default.fps
+    ns = sched.schedule_from_search(g, r)
+    assert ns.fps == pytest.approx(r.best.fps, rel=1e-6)
