@@ -9,6 +9,7 @@ import time
 MODULES = [
     "table1_perf",
     "sched_bench",
+    "serve_bench",
     "table4_memory",
     "fig10_speedup",
     "fig11_access",

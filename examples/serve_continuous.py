@@ -1,0 +1,60 @@
+"""Continuous batching over compressed (BSR-deployed) weights, end to end:
+
+  schedule search -> deploy_weight packing -> paged-KV continuous batching
+
+and the honesty check that makes it trustworthy: at target_sparsity=0 the
+compressed engine's greedy tokens equal the dense QAT engine's, token for
+token.
+
+  PYTHONPATH=src python examples/serve_continuous.py
+"""
+import json
+
+import jax
+import numpy as np
+
+from repro.models import registry
+from repro.serve import BatchConfig, BatchServer, Request, ServeConfig
+from repro.serve import deployed as DP
+from repro.launch.serve import synthetic_trace
+
+
+def main():
+    cfg = registry.get_smoke_config("yi-6b", dtype="float32", cim_mode="qat")
+    params = registry.model_fns(cfg).init_params(cfg, jax.random.PRNGKey(0))
+
+    print("[1] mapping search over the LM projection graph")
+    schedule = DP.default_schedule(cfg)
+    print(f"    searched tile (group, alpha) = {schedule.candidate.tile} "
+          f"-> serving (bk, bn)")
+
+    print("[2] deploy: pack every CIM projection for the BSR kernel")
+    sp = DP.compress(cfg, params, target_sparsity=0.5, schedule=schedule)
+    print("   ", json.dumps(sp.report()))
+
+    print("[3] continuous batching over a mixed-length trace")
+    bcfg = BatchConfig(n_slots=4, block_size=8, n_blocks=64)
+    srv = BatchServer(cfg, sp, ServeConfig(), bcfg, continuous=True)
+    trace = lambda: synthetic_trace(cfg, n_requests=8, max_prompt=16,
+                                    max_new=24)
+    srv.run(trace())  # compile
+    rep = srv.run(trace())
+    print("   ", json.dumps(rep.to_json()))
+
+    print("[4] honesty check: sparsity-0 compressed tokens == dense tokens")
+    from repro.serve import Engine
+    sp0 = DP.compress(cfg, params, target_sparsity=0.0, schedule=schedule)
+    reqs = trace()[:3]
+    srv0 = BatchServer(cfg, sp0, ServeConfig(),
+                       BatchConfig(n_slots=2, block_size=8, n_blocks=32))
+    rep0 = srv0.run([Request(r.rid, r.prompt, r.max_new_tokens) for r in reqs])
+    for r in reqs:
+        eng = Engine(cfg, params, ServeConfig(max_new_tokens=r.max_new_tokens))
+        want = eng.generate({"tokens": jax.numpy.asarray(r.prompt[None])})[0]
+        assert np.array_equal(rep0.outputs[r.rid], want), r.rid
+        print(f"    {r.rid}: {rep0.outputs[r.rid].tolist()} == dense ✓")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,12 @@ from .cim_layer import CIMConfig
 
 @dataclasses.dataclass
 class DeployedWeight:
-    """One projection packed for the kernel (per layer of a stack)."""
+    """One projection packed for the kernel (per layer of a stack).
+
+    Registered as a jax pytree so a whole model of packed projections can be
+    passed through ``jit`` (the serving engines do exactly that); the block
+    arrays are the leaves, the geometry is static aux data.
+    """
 
     packed: List[dict]  # one kernel dict per stacked layer
     d_in: int
@@ -34,6 +39,38 @@ class DeployedWeight:
     @property
     def density(self) -> float:
         return float(np.mean([p["density"] for p in self.packed]))
+
+    @property
+    def tile(self) -> tuple:
+        """(bk, bn) block shape the projection was packed with."""
+        b = self.packed[0]["blocks"]
+        return (int(b.shape[2]), int(b.shape[3]))
+
+    def astype(self, dtype):
+        """No-op for call-site compatibility with raw weight arrays (the
+        model code writes ``p["wq"].astype(x.dtype)``); the kernel's int8
+        blocks + f32 scales are the only at-rest representation."""
+        return self
+
+
+jax.tree_util.register_pytree_node(
+    DeployedWeight,
+    lambda dw: ((dw.packed,), (dw.d_in, dw.d_out, dw.bits)),
+    lambda aux, ch: DeployedWeight(ch[0], *aux),
+)
+
+
+def fit_tile(d_in: int, d_out: int, bk: int, bn: int) -> tuple:
+    """Largest (bk, bn) at most the requested tile that exactly divides
+    (d_in, d_out) - ``pack_bsr`` requires exact tiling."""
+    return (_largest_divisor(d_in, bk), _largest_divisor(d_out, bn))
+
+
+def _largest_divisor(n: int, at_most: int) -> int:
+    for d in range(min(at_most, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
 
 
 def deploy_weight(w, cim: CIMConfig, bk: int = 128, bn: int = 128,

@@ -101,9 +101,14 @@ def prune_mask_2d(
     w2d: jnp.ndarray, n: int, alpha: int, target_sparsity: float
 ) -> jnp.ndarray:
     """Binary mask (same shape as w2d, un-padded) zeroing the lowest-norm
-    (n x alpha) tiles until >= target_sparsity of tiles are zero."""
+    (n x alpha) tiles until >= target_sparsity of tiles are zero.
+
+    target_sparsity <= 0 keeps every tile (the strict ``>`` threshold would
+    otherwise always drop the minimum-norm tile, making "no pruning"
+    unreachable - which matters for deploy-vs-dense parity checks)."""
+    if target_sparsity <= 0.0:
+        return jnp.ones_like(w2d)
     norms = tile_norms(w2d, n, alpha)
-    k = norms.size
     thresh = jnp.quantile(norms.reshape(-1), target_sparsity)
     keep = norms > thresh  # (di/n, do/alpha)
     mask = jnp.repeat(jnp.repeat(keep, n, axis=0), alpha, axis=1)
@@ -114,6 +119,8 @@ def prune_mask_conv(
     w_hwio: jnp.ndarray, n: int, alpha: int, target_sparsity: float
 ) -> jnp.ndarray:
     """Conv version: global threshold over all (position, tile) norms."""
+    if target_sparsity <= 0.0:
+        return jnp.ones_like(w_hwio)
     h, w, i, o = w_hwio.shape
     flat = w_hwio.reshape(h * w, i, o)
     norms = jax.vmap(lambda m: tile_norms(m, n, alpha))(flat)  # (hw, i/n, o/a)

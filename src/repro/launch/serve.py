@@ -1,11 +1,20 @@
-"""Serving driver: batched generation with the Engine.
+"""Serving driver: continuous-batching (default) or legacy static engine.
 
+  # continuous batching over a synthetic mixed-length trace
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke
+
+  # same trace, weights BSR-compressed with a searched schedule tile
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
-      --batch 4 --prompt-len 16 --new-tokens 32
+      --compressed --target-sparsity 0.5
+
+  # legacy static-batch Engine (any registry family)
+  PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b --smoke \\
+      --engine legacy --batch 4 --prompt-len 16 --new-tokens 32
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -13,26 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import registry
-from ..serve import Engine, ServeConfig
+from ..serve import (BatchConfig, BatchServer, Engine, Request, ServeConfig,
+                     deployed)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--dtype", default="float32")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = (registry.get_smoke_config(args.arch, dtype=args.dtype) if args.smoke
-           else registry.get_config(args.arch, dtype=args.dtype))
-    fns = registry.model_fns(cfg)
-    params = fns.init_params(cfg, jax.random.PRNGKey(args.seed))
-
+def _legacy(args, cfg, params, fns=None):
     rng = np.random.default_rng(args.seed)
     batch = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)}
@@ -47,7 +41,7 @@ def main(argv=None):
 
     eng = Engine(cfg, params, ServeConfig(max_new_tokens=args.new_tokens,
                                           temperature=args.temperature,
-                                          seed=args.seed))
+                                          seed=args.seed), fns=fns)
     t0 = time.time()
     out = eng.generate(batch)
     dt = time.time() - t0
@@ -55,6 +49,88 @@ def main(argv=None):
     print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
     for row in out[: min(4, args.batch)]:
         print("  ", row.tolist())
+
+
+def synthetic_trace(cfg, n_requests: int, max_prompt: int, max_new: int,
+                    seed: int = 0, long_every: int = 4):
+    """Mixed-length trace: every ``long_every``-th request decodes the full
+    ``max_new`` tokens, the rest draw short lengths - the skew that makes
+    static batching idle its lanes."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(2, max(3, max_prompt)))
+        n_new = max_new if i % long_every == 0 else int(
+            rng.integers(1, max(2, max_new // 6)))
+        reqs.append(Request(f"r{i}", rng.integers(0, cfg.vocab, plen), n_new))
+    return reqs
+
+
+def _batch(args, cfg, params):
+    sp = (deployed.compress(cfg, params, target_sparsity=args.target_sparsity,
+                            schedule=deployed.default_schedule(cfg))
+          if args.compressed else deployed.from_params(cfg, params))
+    if args.compressed:
+        print("compression:", json.dumps(sp.report()))
+    bcfg = BatchConfig(n_slots=args.slots, block_size=args.block_size,
+                       n_blocks=args.kv_blocks)
+    srv = BatchServer(cfg, sp, ServeConfig(temperature=args.temperature,
+                                           seed=args.seed), bcfg,
+                      continuous=(args.engine == "batch"))
+    trace = lambda: synthetic_trace(cfg, args.requests, args.prompt_len,
+                                    args.new_tokens, seed=args.seed)
+    srv.run(trace())  # compile
+    rep = srv.run(trace())
+    print(json.dumps(rep.to_json(), indent=1))
+    for rid in list(rep.outputs)[:3]:
+        print(f"  {rid}:", rep.outputs[rid].tolist())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=["batch", "static", "legacy"],
+                    default="batch",
+                    help="batch = continuous batching (default); static = "
+                    "same server, whole-batch admission; legacy = Engine")
+    ap.add_argument("--compressed", action="store_true",
+                    help="serve deploy_weight-packed (BSR) projections")
+    ap.add_argument("--target-sparsity", type=float, default=0.5)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--kv-blocks", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (registry.get_smoke_config(args.arch, dtype=args.dtype) if args.smoke
+           else registry.get_config(args.arch, dtype=args.dtype))
+    fns = registry.model_fns(cfg)
+    params = fns.init_params(cfg, jax.random.PRNGKey(args.seed))
+
+    use_legacy = args.engine == "legacy"
+    if not use_legacy and cfg.family not in ("dense", "moe"):
+        print(f"note: no batch-server path for the {cfg.family} family yet; "
+              "falling back to the legacy Engine")
+        use_legacy = True
+
+    if use_legacy:
+        if args.compressed:
+            sp = deployed.compress(cfg, params,
+                                   target_sparsity=args.target_sparsity,
+                                   schedule=deployed.default_schedule(cfg))
+            print("compression:", json.dumps(sp.report()))
+            _legacy(args, cfg, sp, fns=deployed.model_fns(cfg))
+        else:
+            _legacy(args, cfg, params)
+    else:
+        _batch(args, cfg, params)
 
 
 if __name__ == "__main__":

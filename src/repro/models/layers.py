@@ -11,6 +11,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import deploy
 from ..core import quant as Q
 from ..core.cim_layer import CIMConfig
 
@@ -36,8 +37,16 @@ def maybe_quant_w(w: jnp.ndarray, cim: CIMConfig) -> jnp.ndarray:
     return w
 
 
-def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, cim: CIMConfig) -> jnp.ndarray:
-    """x @ w with MARS QAT when enabled. w: (d_in, d_out) or (E, d_in, d_out)."""
+def cim_matmul(x: jnp.ndarray, w, cim: CIMConfig) -> jnp.ndarray:
+    """x @ w with MARS QAT when enabled. w: (d_in, d_out) or (E, d_in, d_out).
+
+    ``w`` may also be a :class:`repro.core.deploy.DeployedWeight` - then the
+    projection runs on the int8 BSR Pallas kernel (eq.5 activation quant +
+    zero-block skip), making the compressed form the compute representation
+    wherever this model code executes (prefill, decode, batch serving).
+    """
+    if isinstance(w, deploy.DeployedWeight):
+        return deploy.deployed_matmul(x, w, a_bits=cim.quant.a_bits)
     return maybe_quant_a(x, cim) @ maybe_quant_w(w, cim)
 
 
@@ -261,6 +270,41 @@ def decode_attention(p: dict, x1: jnp.ndarray, kcache: jnp.ndarray,
     )
     y = cim_matmul(o.reshape(b, 1, -1), p["wo"].astype(x1.dtype), cfg.cim)
     return y, kcache, vcache
+
+
+def decode_attention_multi(p: dict, x1: jnp.ndarray, kview: jnp.ndarray,
+                           vview: jnp.ndarray, pos: jnp.ndarray, cfg,
+                           window: int = 0, use_rope: bool = True):
+    """One-token decode with PER-ROW positions over a gathered KV view.
+
+    The continuous-batching engine serves slots at different depths in one
+    step: row b is at absolute position ``pos[b]``. ``kview``/``vview``
+    (B, Sv, KV, dh) are the paged KV blocks gathered contiguously for this
+    step (logical positions 0..Sv-1); positions beyond a row's ``pos`` hold
+    stale or scratch data and are masked out, so the view length only has
+    to cover the deepest active row. Returns (y, k_new, v_new) where
+    k_new/v_new (B, KV, dh) are this token's cache entries for the pool
+    write-back - the view itself is a throwaway gather."""
+    b = x1.shape[0]
+    q, k, v = qkv_project(p, x1, cfg, cfg.cim)
+    if use_rope:
+        pp = pos[:, None]  # (B, 1)
+        q, k = rope(q, pp, cfg.rope_theta), rope(k, pp, cfg.rope_theta)
+    rows = jnp.arange(b)
+    kview = kview.at[rows, pos].set(k[:, 0].astype(kview.dtype))
+    vview = vview.at[rows, pos].set(v[:, 0].astype(vview.dtype))
+    kj = jnp.arange(kview.shape[1])[None, None, None, :]
+    pe = pos[:, None, None, None]
+    mask = kj <= pe
+    w = jnp.asarray(window)
+    mask = mask & ((w <= 0) | (kj > pe - w))
+    nh = getattr(cfg, "n_heads_eff", cfg.n_heads)
+    o = attention_scores(
+        q, _expand_kv(kview.astype(x1.dtype), nh, cfg.n_heads),
+        _expand_kv(vview.astype(x1.dtype), nh, cfg.n_heads), mask
+    )
+    y = cim_matmul(o.reshape(b, 1, -1), p["wo"].astype(x1.dtype), cfg.cim)
+    return y, k[:, 0], v[:, 0]
 
 
 # ---------------------------------------------------------------------------

@@ -127,20 +127,9 @@ def schedule_from_search(graph: LayerGraph, result: SearchResult,
 
 
 def _deploy_tile(sched: LayerSchedule, d_in: int, d_out: int) -> tuple:
-    """(bk, bn) for the kernel: the schedule tile, padded up to a divisor
+    """(bk, bn) for the kernel: the schedule tile, clipped to a divisor
     of the weight shape (pack_bsr requires exact tiling)."""
-    bk = sched.group if d_in % sched.group == 0 else _largest_divisor(
-        d_in, sched.group)
-    bn = sched.alpha if d_out % sched.alpha == 0 else _largest_divisor(
-        d_out, sched.alpha)
-    return bk, bn
-
-
-def _largest_divisor(n: int, at_most: int) -> int:
-    for d in range(min(at_most, n), 0, -1):
-        if n % d == 0:
-            return d
-    return 1
+    return D.fit_tile(d_in, d_out, sched.group, sched.alpha)
 
 
 def deploy_layer(w, sched: LayerSchedule, cim: CIMConfig,

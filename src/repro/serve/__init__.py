@@ -1,1 +1,13 @@
+"""repro.serve - serving engines over raw or BSR-compressed weights.
+
+  * :class:`Engine` - static-batch prefill+decode loop (any registry family).
+  * :mod:`deployed` - ``ServingParams``/``compress``: pack every CIM-mapped
+    projection through ``deploy_weight`` so the int8 BSR Pallas kernel is
+    the decode hot path.
+  * :mod:`batching` / :class:`BatchServer` - continuous batching with a
+    paged (block-allocated) KV cache and slot-level admission.
+"""
+from . import batching, deployed, server  # noqa: F401
+from .batching import PagedKVCache, Request, RequestQueue  # noqa: F401
 from .engine import Engine, ServeConfig  # noqa: F401
+from .server import BatchConfig, BatchServer, ServeReport  # noqa: F401

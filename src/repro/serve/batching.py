@@ -1,0 +1,241 @@
+"""Request-level batching state: queue, slots, and a paged KV cache.
+
+The pieces the continuous-batching server composes:
+
+  * :class:`Request` / :class:`RequestQueue` - arrival-time-ordered intake.
+  * :class:`Slot` - one occupied batch lane: position, pending input token,
+    output buffer, timing marks (TTFT / per-token latency).
+  * :class:`PagedKVCache` - a block pool with a free list. KV for every
+    slot lives in fixed-size blocks indexed by a per-slot block table, so a
+    mixed-length batch holds exactly the blocks its sequences need instead
+    of ``n_slots * max_len`` of padding, and blocks freed by a finished
+    request are immediately reusable by the next admission. This is the
+    serving-side analogue of the macro free-list the MARS allocator manages:
+    storage is granted at a fixed quantum and recycled wave by wave.
+
+Physical block 0 is reserved as scratch: idle batch lanes read and write it
+so every decode step keeps a fixed shape, and its contents are never
+attended by a live slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``arrival`` is seconds relative to the start
+    of the serve loop (0 = already waiting)."""
+
+    rid: str
+    prompt: np.ndarray  # (S,) int32 token ids
+    max_new_tokens: int
+    arrival: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError(f"{self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"{self.rid}: max_new_tokens must be >= 1")
+
+
+class RequestQueue:
+    """Min-heap on (arrival, admission order)."""
+
+    def __init__(self, requests: Optional[List[Request]] = None):
+        self._heap: list = []
+        self._seq = 0
+        self._front = -1
+        for r in requests or []:
+            self.push(r)
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (req.arrival, self._seq, req))
+        self._seq += 1
+
+    def requeue(self, req: Request) -> None:
+        """Return a popped-but-unadmitted request to the FRONT of its
+        arrival cohort (a plain push would hand it a fresh sequence number
+        and let smaller same-arrival peers leapfrog it forever)."""
+        heapq.heappush(self._heap, (req.arrival, self._front, req))
+        self._front -= 1
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        if self._heap and self._heap[0][0] <= now:
+            return heapq.heappop(self._heap)[2]
+        return None
+
+    def next_arrival(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+@dataclasses.dataclass
+class Slot:
+    """Per-lane decode state while a request occupies a batch slot."""
+
+    req: Request
+    pos: int  # next KV write position == current sequence length
+    next_token: int  # pending input token (last sampled)
+    out: List[int]
+    t_admit: float
+    token_times: List[float]
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.req.max_new_tokens
+
+    @property
+    def worst_positions(self) -> int:
+        """KV positions this request can ever occupy (for reservation)."""
+        return len(self.req.prompt) + self.req.max_new_tokens
+
+
+class PagedKVCache:
+    """Block-pooled KV storage for the dense/moe/vlm attention cache.
+
+    pool_k / pool_v: (n_blocks, L, block_size, KV, dh). Per-slot block
+    tables map logical block i -> physical block id. ``gather`` produces the
+    contiguous (L, B, Sv, KV, dh) view a decode step attends over - sized by
+    the deepest ACTIVE slot, not by the engine's max length.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, n_blocks: int,
+                 block_size: int, dtype=None):
+        if n_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is scratch)")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        shape = (n_blocks, cfg.n_layers, block_size, cfg.n_kv_heads_eff, cfg.dh)
+        # host numpy, written IN PLACE: a functional .at[].set would copy
+        # the whole pool per token, re-creating the max-len-copy cost the
+        # paged layout exists to avoid
+        np_dtype = np.dtype(dtype or cfg.param_dtype)
+        self.pool_k = np.zeros(shape, np_dtype)
+        self.pool_v = np.zeros(shape, np_dtype)
+        # LIFO free list => a freed block is the first one re-granted
+        self._free: List[int] = list(range(1, n_blocks))
+        self.tables: List[List[int]] = [[] for _ in range(n_slots)]
+        # stats
+        self._ever_used: set = set()
+        self.n_alloc = 0
+        self.n_reused = 0
+        self.peak_blocks = 0
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return sum(len(t) for t in self.tables)
+
+    def blocks_for(self, n_pos: int) -> int:
+        return -(-n_pos // self.block_size)
+
+    def stats(self) -> dict:
+        return {
+            "n_blocks": self.n_blocks,
+            "block_size": self.block_size,
+            "allocations": self.n_alloc,
+            "reused_blocks": self.n_reused,
+            "peak_blocks": self.peak_blocks,
+        }
+
+    # -- allocation ---------------------------------------------------------
+
+    def _alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                "paged KV pool exhausted - admission control should have "
+                "reserved worst-case blocks; raise n_blocks")
+        b = self._free.pop()
+        if b in self._ever_used:
+            self.n_reused += 1
+        self._ever_used.add(b)
+        self.n_alloc += 1
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use + 1)
+        return b
+
+    def ensure(self, slot: int, n_pos: int) -> None:
+        """Grow ``slot``'s table until positions [0, n_pos) fit."""
+        t = self.tables[slot]
+        while len(t) * self.block_size < n_pos:
+            t.append(self._alloc())
+
+    def free_slot(self, slot: int) -> None:
+        self._free.extend(reversed(self.tables[slot]))
+        self.tables[slot] = []
+
+    # -- data movement ------------------------------------------------------
+
+    def write_prefill(self, slot: int, k: jnp.ndarray, v: jnp.ndarray,
+                      true_len: int) -> None:
+        """Scatter a prefill cache (L, S_pad, KV, dh) into ``slot``'s blocks.
+        Only ceil(true_len / block_size) blocks are allocated; pad positions
+        inside the last block carry garbage that decode overwrites before
+        its mask ever reaches them."""
+        bs = self.block_size
+        self.ensure(slot, true_len)
+        k, v = np.asarray(k), np.asarray(v)
+        for i, pb in enumerate(self.tables[slot]):
+            self.pool_k[pb] = k[:, i * bs:(i + 1) * bs]
+            self.pool_v[pb] = v[:, i * bs:(i + 1) * bs]
+
+    def view_tables(self, n_view: int) -> np.ndarray:
+        """(n_slots, n_view) physical ids; short/idle slots pad with the
+        scratch block (masked out by per-row positions)."""
+        tbl = np.zeros((self.n_slots, n_view), np.int32)
+        for s, t in enumerate(self.tables):
+            n = min(len(t), n_view)
+            tbl[s, :n] = t[:n]
+        return tbl
+
+    def gather(self, n_view: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(L, B, n_view*block_size, KV, dh) contiguous K/V views."""
+        tbl = self.view_tables(n_view)
+        L = self.cfg.n_layers
+        bs, kvh, dh = self.block_size, self.cfg.n_kv_heads_eff, self.cfg.dh
+
+        def _g(pool):
+            g = pool[tbl]  # (B, n_view, L, bs, KV, dh)
+            g = g.transpose(2, 0, 1, 3, 4, 5)
+            return jnp.asarray(g.reshape(L, self.n_slots, n_view * bs, kvh, dh))
+
+        return _g(self.pool_k), _g(self.pool_v)
+
+    def write_coords(self, positions: List[Optional[int]]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Physical (block, offset) per lane for a decode-step write; idle
+        lanes (None) target the scratch block."""
+        pb = np.zeros((self.n_slots,), np.int32)
+        off = np.zeros((self.n_slots,), np.int32)
+        for s, pos in enumerate(positions):
+            if pos is None:
+                continue
+            pb[s] = self.tables[s][pos // self.block_size]
+            off[s] = pos % self.block_size
+        return pb, off
+
+    def write_token(self, pb: np.ndarray, off: np.ndarray,
+                    k_new: jnp.ndarray, v_new: jnp.ndarray) -> None:
+        """Write one decode step's K/V (L, B, KV, dh) into the pool (in
+        place - only the touched (block, offset) rows move)."""
+        kt = np.asarray(k_new).transpose(1, 0, 2, 3)  # (B, L, KV, dh)
+        vt = np.asarray(v_new).transpose(1, 0, 2, 3)
+        self.pool_k[pb, :, off] = kt
+        self.pool_v[pb, :, off] = vt

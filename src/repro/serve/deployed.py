@@ -1,0 +1,295 @@
+"""Compressed serving: registry params -> BSR-packed weights on the hot path.
+
+MARS's inference premise (§III) is that the compressed representation - the
+nonzero group-sets plus index codes - is BOTH the at-rest and the at-compute
+form. For the LM zoo that means every CIM-mapped projection must execute
+through ``core.deploy.deployed_matmul`` (the int8 block-sparse Pallas
+kernel) at serving time, not just in kernel benchmarks.
+
+This module provides the bridge:
+
+  * :class:`ServingParams` - per-layer serving weights for the dense / moe /
+    vlm families, registered as a jax pytree. Leaves are either raw arrays
+    (dense serving) or :class:`~repro.core.deploy.DeployedWeight` (compressed
+    serving); ``models.layers.cim_matmul`` dispatches per leaf, so the SAME
+    forward code serves both.
+  * :func:`compress` - walks a registry model's params and runs every
+    2-D CIM-mapped projection (QKV/O, MLP, LM head) through ``deploy_weight``.
+    The (bk, bn) block shape per projection comes from a ``sched.search``
+    schedule, so the tile the simulator chose IS the tile the kernel runs.
+  * :func:`model_fns` - prefill / decode_step with the registry signatures
+    (python loop over layers instead of ``lax.scan``, because packed blocks
+    have per-layer shapes), so ``serve.Engine`` serves compressed weights
+    unchanged.
+  * :func:`decode_step_paged` - the per-row-position decode step the
+    continuous-batching server drives over a paged KV view.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import deploy as D
+from ..models import registry, transformer
+from ..models import layers as L
+from ..models.config import ModelConfig
+from ..sched import (NetworkSchedule, lm_graph, schedule_from_search,
+                     search_mapping)
+
+# projections deployed per transformer block (2-D leaves only: MoE expert
+# stacks are 3-D and stay on the dense/QAT path)
+PROJECTIONS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+SUPPORTED_FAMILIES = ("dense", "moe", "vlm")
+
+
+@dataclasses.dataclass
+class ServingParams:
+    """Per-layer serving weights (pytree). ``layers[i]`` holds one block's
+    params; projection leaves are arrays or DeployedWeight."""
+
+    embed: Any
+    final_ln: Any
+    layers: List[dict]
+    head: Any = None  # None => tied embeddings (use embed.T)
+    mm_proj: Any = None  # vlm projector (kept in float)
+
+    def deployed(self) -> Dict[str, D.DeployedWeight]:
+        """Name -> DeployedWeight for every compressed projection."""
+        out = {}
+        for i, p in enumerate(self.layers):
+            for k, v in p.items():
+                if isinstance(v, D.DeployedWeight):
+                    out[f"blk{i}_{k}"] = v
+        if isinstance(self.head, D.DeployedWeight):
+            out["head"] = self.head
+        return out
+
+    def report(self) -> dict:
+        """Table IV-style storage accounting over the deployed projections."""
+        return D.deployment_report(self.deployed())
+
+
+jax.tree_util.register_pytree_node(
+    ServingParams,
+    lambda sp: ((sp.embed, sp.final_ln, sp.layers, sp.head, sp.mm_proj), None),
+    lambda aux, ch: ServingParams(*ch),
+)
+
+
+def _check_family(cfg: ModelConfig) -> None:
+    if cfg.family not in SUPPORTED_FAMILIES:
+        raise NotImplementedError(
+            f"serve.deployed supports families {SUPPORTED_FAMILIES}, not "
+            f"{cfg.family!r} (ssm/hybrid/encdec caches have no paged-KV "
+            "adaptation yet)")
+
+
+def from_params(cfg: ModelConfig, params: dict) -> ServingParams:
+    """Unstack registry params (stacked (L, ...) leaves) into per-layer
+    dicts, without compressing anything."""
+    _check_family(cfg)
+    layers = [jax.tree.map(lambda a: a[i], params["layers"])
+              for i in range(cfg.n_layers)]
+    return ServingParams(
+        embed=params["embed"], final_ln=params["final_ln"], layers=layers,
+        head=params.get("head"), mm_proj=params.get("mm_proj"),
+    )
+
+
+def default_schedule(cfg: ModelConfig, seq_len: int = 128,
+                     groups=(16, 32, 64), alphas=(16, 32, 64),
+                     sparsity_gs: float = 0.6) -> NetworkSchedule:
+    """Mapping search over the model's CIM projection graph: the returned
+    schedule's per-layer (group, alpha) becomes the serving (bk, bn)."""
+    graph = lm_graph(cfg, seq_len=seq_len, sparsity_gs=sparsity_gs)
+    result = search_mapping(graph, w_bits=cfg.w_bits, a_bits=cfg.a_bits,
+                            groups=groups, alphas=alphas)
+    return schedule_from_search(graph, result, w_bits=cfg.w_bits,
+                                a_bits=cfg.a_bits)
+
+
+def compress(cfg: ModelConfig, params: dict,
+             target_sparsity: Optional[float] = None,
+             schedule: Optional[NetworkSchedule] = None) -> ServingParams:
+    """Pack every CIM-mapped 2-D projection for the BSR kernel.
+
+    ``schedule`` (from ``sched.search`` over ``lm_graph(cfg)``) supplies the
+    per-projection tile; without one, the model's ``cim_alpha`` tile is used
+    (clipped to exact divisors). MoE expert stacks (3-D) and norm gains stay
+    dense. ``target_sparsity=0`` packs every block (no pruning) - the
+    numerically-honest configuration that must reproduce dense-math tokens.
+    """
+    sp = from_params(cfg, params)
+    cim = cfg.cim
+    tiles = {}
+    if schedule is not None:
+        tiles = {s.name: (s.group, s.alpha) for s in schedule.layers}
+
+    def pack(name: str, w) -> D.DeployedWeight:
+        d_in, d_out = int(w.shape[-2]), int(w.shape[-1])
+        g, a = tiles.get(name, (cfg.cim_alpha, cfg.cim_alpha))
+        bk, bn = D.fit_tile(d_in, d_out, g, a)
+        return D.deploy_weight(w, cim, bk=bk, bn=bn,
+                               target_sparsity=target_sparsity)
+
+    for i, p in enumerate(sp.layers):
+        for proj in PROJECTIONS:
+            w = p.get(proj)
+            if w is None or getattr(w, "ndim", 0) != 2:
+                continue  # MoE expert stacks are (E, d, ff): leave dense
+            p[proj] = pack(f"blk{i}_{proj}", w)
+    if sp.head is not None:
+        sp.head = pack("head", sp.head)
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# Forward paths (python loop over layers - packed shapes differ per layer)
+# ---------------------------------------------------------------------------
+
+
+def _layer_window_theta(cfg: ModelConfig) -> Tuple[list, list]:
+    """Static per-layer (window, rope_theta) - mirrors
+    ``transformer._layer_kind_arrays`` but as python values for the loop."""
+    kinds = cfg.layer_kinds()
+    windows = [cfg.window if k == 1 else 0 for k in kinds]
+    if cfg.local_global_ratio > 0:
+        thetas = [cfg.rope_theta if k == 1 else 1e6 for k in kinds]
+    else:
+        thetas = [cfg.rope_theta] * cfg.n_layers
+    return windows, thetas
+
+
+def _embed_inputs(sp: ServingParams, batch: dict, cfg: ModelConfig):
+    return transformer._embed_inputs(
+        {"embed": sp.embed, "mm_proj": sp.mm_proj}, batch, cfg)
+
+
+def _head(sp: ServingParams):
+    return sp.head if sp.head is not None else sp.embed.T
+
+
+def prefill_hidden(sp: ServingParams, batch: dict, cfg: ModelConfig):
+    """Full-sequence forward. Returns (hidden (B,S,D), cache k/v
+    (L,B,S,KV,dh)) - the same math as ``transformer.forward_hidden`` for the
+    dense/moe/vlm families, but layer-by-layer so projection leaves may be
+    DeployedWeight."""
+    x = _embed_inputs(sp, batch, cfg)
+    _, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    windows, thetas = _layer_window_theta(cfg)
+    ks, vs = [], []
+    for i, p in enumerate(sp.layers):
+        x, _, (k, v) = transformer._attn_mlp_body(
+            p, x, cfg, windows[i], thetas[i], positions)
+        ks.append(k)
+        vs.append(v)
+    x = L.rmsnorm(x, sp.final_ln)
+    return x, {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+
+def prefill(sp: ServingParams, batch: dict, cfg: ModelConfig):
+    """Registry-signature prefill: (last-position logits, cache w/ 'pos')."""
+    hidden, cache = prefill_hidden(sp, batch, cfg)
+    logits = L.logits_out(_head(sp), hidden[:, -1:, :], cfg.cim)[:, 0, : cfg.vocab]
+    total = batch["tokens"].shape[1]
+    if cfg.family == "vlm":
+        total += batch["patch_embeds"].shape[1]
+    cache["pos"] = jnp.asarray(total, jnp.int32)
+    return logits, cache
+
+
+def prefill_last(sp: ServingParams, tokens: jnp.ndarray, true_len: jnp.ndarray,
+                 cfg: ModelConfig):
+    """Prefill for the batch server: ``tokens`` (B, S_pad) may be padded past
+    the prompt; logits are taken at ``true_len - 1``. Causality guarantees
+    the pad positions cannot influence them, and their (garbage) cache
+    entries sit at positions >= true_len, which decode overwrites before it
+    ever attends to them."""
+    hidden, cache = prefill_hidden(sp, {"tokens": tokens}, cfg)
+    h_last = jnp.take(hidden, jnp.asarray(true_len - 1, jnp.int32), axis=1)
+    logits = L.logits_out(_head(sp), h_last[:, None, :], cfg.cim)[:, 0, : cfg.vocab]
+    return logits, cache["k"], cache["v"]
+
+
+def _mlp(p: dict, h, cfg: ModelConfig):
+    if cfg.family == "moe":
+        y, _ = L.moe_block(p, h, cfg)
+        return y
+    return L.gated_mlp(p, h, cfg.cim)
+
+
+def decode_step(sp: ServingParams, cache: dict, tokens: jnp.ndarray,
+                cfg: ModelConfig):
+    """Registry-signature decode: contiguous per-batch cache, scalar pos.
+    Math-identical to ``transformer.decode_step`` (dense branch)."""
+    x = L.embed(sp.embed, tokens, cfg.param_dtype)
+    pos = cache["pos"]
+    windows, thetas = _layer_window_theta(cfg)
+    ks, vs = [], []
+    for i, p in enumerate(sp.layers):
+        cfg_l = transformer._with_theta(cfg, thetas[i])
+        h = L.rmsnorm(x, p["ln1"])
+        attn, kc, vc = L.decode_attention(p, h, cache["k"][i], cache["v"][i],
+                                          pos, cfg_l, window=windows[i])
+        x = x + attn
+        h = L.rmsnorm(x, p["ln2"])
+        x = x + _mlp(p, h, cfg)
+        ks.append(kc)
+        vs.append(vc)
+    new_cache = {"k": jnp.stack(ks), "v": jnp.stack(vs), "pos": pos + 1}
+    x = L.rmsnorm(x, sp.final_ln)
+    logits = L.logits_out(_head(sp), x, cfg.cim)[:, 0, : cfg.vocab]
+    return logits, new_cache
+
+
+def decode_step_paged(sp: ServingParams, views_k: jnp.ndarray,
+                      views_v: jnp.ndarray, pos: jnp.ndarray,
+                      tokens: jnp.ndarray, cfg: ModelConfig):
+    """One continuous-batching decode step over a gathered paged-KV view.
+
+    views_k/views_v: (L, B, Sv, KV, dh) gathered blocks (logical positions
+    0..Sv-1 per slot); pos: (B,) per-slot absolute positions; tokens: (B, 1).
+    Returns (logits (B, V), k_new (L, B, KV, dh), v_new) - the new entries
+    are written back into the block pool by the caller.
+    """
+    x = L.embed(sp.embed, tokens, cfg.param_dtype)
+    windows, thetas = _layer_window_theta(cfg)
+    ks, vs = [], []
+    for i, p in enumerate(sp.layers):
+        cfg_l = transformer._with_theta(cfg, thetas[i])
+        h = L.rmsnorm(x, p["ln1"])
+        attn, kn, vn = L.decode_attention_multi(
+            p, h, views_k[i], views_v[i], pos, cfg_l, window=windows[i])
+        x = x + attn
+        h = L.rmsnorm(x, p["ln2"])
+        x = x + _mlp(p, h, cfg)
+        ks.append(kn)
+        vs.append(vn)
+    x = L.rmsnorm(x, sp.final_ln)
+    logits = L.logits_out(_head(sp), x, cfg.cim)[:, 0, : cfg.vocab]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def model_fns(cfg: ModelConfig) -> registry.ModelFns:
+    """ModelFns whose prefill/decode consume a :class:`ServingParams` in
+    place of raw params - plug into ``serve.Engine`` via its ``fns`` arg to
+    serve compressed (or unstacked dense) weights."""
+    _check_family(cfg)
+
+    def _no_init(*a, **k):
+        raise NotImplementedError(
+            "ServingParams are built from trained params via "
+            "serve.deployed.from_params/compress, not initialized")
+
+    return registry.ModelFns(
+        init_params=_no_init,
+        train_loss=_no_init,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=transformer.init_cache,
+    )

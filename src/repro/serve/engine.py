@@ -1,9 +1,12 @@
-"""Batched serving engine: prefill + decode with KV/state caches.
+"""Static-batch serving engine: prefill + decode with KV/state caches.
 
 Serves any registry architecture. Greedy or temperature sampling, per-
 sequence EOS tracking (a finished row keeps decoding pad tokens but its
-output is frozen), bounded max_len. The pjit shardings for multi-chip
-serving come from launch.shardings; on CPU this runs eagerly jitted.
+output is frozen), bounded max_len. The decode jit donates the cache so
+each step updates it in place rather than copying max_len of KV per token.
+Pass ``fns=serve.deployed.model_fns(cfg)`` (with ``ServingParams`` as
+``params``) to serve BSR-compressed weights through the same loop. For
+request-level continuous batching see ``serve.server.BatchServer``.
 """
 from __future__ import annotations
 
@@ -26,14 +29,36 @@ class ServeConfig:
     seed: int = 0
 
 
+def sample_tokens(logits: jnp.ndarray, key, scfg: ServeConfig) -> jnp.ndarray:
+    """(B, V) logits -> (B,) int32 tokens: greedy at temperature<=0, else
+    temperature-scaled categorical. Shared by Engine and BatchServer; note
+    the two engines only produce identical tokens under GREEDY decoding -
+    with temperature>0 their PRNG key schedules differ (per-batch-step vs
+    per-slot/admission splits)."""
+    if scfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    tok = jax.random.categorical(key, logits / scfg.temperature, axis=-1)
+    return tok.astype(jnp.int32)
+
+
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = ServeConfig()):
+    def __init__(self, cfg: ModelConfig, params,
+                 scfg: Optional[ServeConfig] = None,
+                 fns: Optional[registry.ModelFns] = None):
+        """``params`` is whatever ``fns`` consumes: raw registry params by
+        default, or a ``serve.deployed.ServingParams`` when paired with
+        ``deployed.model_fns(cfg)`` (compressed/BSR serving). ``scfg``
+        defaults to a fresh ServeConfig per engine (a shared default
+        instance would leak config edits across engines)."""
         self.cfg = cfg
         self.params = params
-        self.scfg = scfg
-        self.fns = registry.model_fns(cfg)
+        self.scfg = scfg if scfg is not None else ServeConfig()
+        self.fns = fns if fns is not None else registry.model_fns(cfg)
         self._prefill = jax.jit(self.fns.prefill, static_argnames=("cfg",))
-        self._decode = jax.jit(self.fns.decode_step, static_argnames=("cfg",))
+        # donate the cache: each decode step updates it in place instead of
+        # allocating a fresh max_len-sized copy per token
+        self._decode = jax.jit(self.fns.decode_step, static_argnames=("cfg",),
+                               donate_argnums=(1,))
 
     def generate(self, batch: dict, max_new_tokens: Optional[int] = None) -> np.ndarray:
         """batch: tokens (B, S) [+ patch_embeds / frames]. Returns
@@ -77,8 +102,4 @@ class Engine:
         return out
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
-        if self.scfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        probs_logits = logits / self.scfg.temperature
-        tok = jax.random.categorical(key, probs_logits, axis=-1)
-        return tok[:, None].astype(jnp.int32)
+        return sample_tokens(logits, key, self.scfg)[:, None]

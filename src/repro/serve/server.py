@@ -1,0 +1,248 @@
+"""Continuous-batching serve loop over (optionally compressed) weights.
+
+One :class:`BatchServer` drives ``deployed.decode_step_paged`` over a fixed
+number of slots. Every step decodes all slots in one batched call; finished
+requests free their KV blocks and the freed slot admits the next queued
+request immediately (continuous batching). With ``continuous=False`` the
+same loop becomes the static baseline: admission waits until EVERY slot has
+drained, so lanes idle exactly as a static batcher's padding rows do -
+making static-vs-continuous a pure scheduling-policy comparison (identical
+kernels, identical per-step cost).
+
+Because the model functions route every projection through
+``layers.cim_matmul``, the server serves raw float weights and BSR-packed
+:class:`~repro.serve.deployed.ServingParams` identically - compressed
+serving is a constructor argument, not a separate engine.
+
+Admission reserves worst-case blocks (prompt + max_new) so a mid-stream
+request can never deadlock the pool; a request that cannot fit even in an
+empty pool is rejected at ``run`` time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from . import deployed
+from .batching import PagedKVCache, Request, RequestQueue, Slot
+from .engine import ServeConfig, sample_tokens
+
+
+@dataclasses.dataclass
+class BatchConfig:
+    n_slots: int = 4
+    block_size: int = 8
+    n_blocks: int = 64
+    # round the gathered view up to a multiple of this many blocks so jit
+    # recompiles O(log) times instead of once per sequence-length block
+    view_bucket: int = 2
+    idle_wait_s: float = 0.002
+
+
+def _percentiles(xs: List[float]) -> dict:
+    if not xs:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    a = np.asarray(xs)
+    return {"p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean())}
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Throughput / latency summary of one trace."""
+
+    n_requests: int
+    total_tokens: int
+    wall_s: float
+    n_decode_steps: int
+    ttft_s: List[float]  # per request
+    tpot_s: List[float]  # per decode token, pooled across requests
+    outputs: Dict[str, np.ndarray]
+    kv_stats: dict
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_tokens / max(self.wall_s, 1e-9)
+
+    _n_slots: int = 1
+
+    @property
+    def slot_efficiency(self) -> float:
+        """Fraction of decoded lanes that produced a kept token (prefill
+        emits each request's first token, so those don't count)."""
+        if self.n_decode_steps == 0:
+            return 1.0
+        return min(1.0, (self.total_tokens - self.n_requests)
+                   / (self.n_decode_steps * self._n_slots))
+
+    def to_json(self) -> dict:
+        return {
+            "n_requests": self.n_requests,
+            "total_tokens": self.total_tokens,
+            "wall_s": round(self.wall_s, 4),
+            "tokens_per_s": round(self.tokens_per_s, 2),
+            "n_decode_steps": self.n_decode_steps,
+            "slot_efficiency": round(self.slot_efficiency, 4),
+            "ttft": {k: round(v, 5) for k, v in _percentiles(self.ttft_s).items()},
+            "tpot": {k: round(v, 5) for k, v in _percentiles(self.tpot_s).items()},
+            "kv": self.kv_stats,
+        }
+
+
+class BatchServer:
+    """Slot-based serving engine (continuous or static batching)."""
+
+    def __init__(self, cfg: ModelConfig, sp: deployed.ServingParams,
+                 scfg: Optional[ServeConfig] = None,
+                 bcfg: Optional[BatchConfig] = None,
+                 continuous: bool = True):
+        if cfg.family == "vlm":
+            raise NotImplementedError(
+                "BatchServer serves token-only requests; vlm prefill needs "
+                "per-request patch embeddings (use serve.Engine)")
+        deployed._check_family(cfg)
+        self.cfg = cfg
+        self.sp = sp
+        self.scfg = scfg if scfg is not None else ServeConfig()
+        self.bcfg = bcfg if bcfg is not None else BatchConfig()
+        self.continuous = continuous
+        self._prefill = jax.jit(deployed.prefill_last, static_argnames=("cfg",))
+        self._decode = jax.jit(deployed.decode_step_paged,
+                               static_argnames=("cfg",))
+
+    def _sample_row(self, logits: jnp.ndarray, key) -> np.ndarray:
+        return np.asarray(sample_tokens(logits, key, self.scfg), np.int32)
+
+    # -- admission ----------------------------------------------------------
+
+    def _worst_blocks(self, req: Request) -> int:
+        return -(-(len(req.prompt) + req.max_new_tokens) // self.bcfg.block_size)
+
+    def _reserved(self, slots: List[Optional[Slot]], kv: PagedKVCache) -> int:
+        """Blocks active slots may still demand beyond what they hold."""
+        r = 0
+        for i, s in enumerate(slots):
+            if s is not None:
+                r += max(0, kv.blocks_for(s.worst_positions)
+                         - len(kv.tables[i]))
+        return r
+
+    def _admit(self, q: RequestQueue, slots: List[Optional[Slot]],
+               kv: PagedKVCache, now: float, key) -> None:
+        if not self.continuous and any(s is not None for s in slots):
+            return  # static policy: only whole-batch admission
+        for i in range(self.bcfg.n_slots):
+            if slots[i] is not None:
+                continue
+            req = q.pop_ready(now)
+            if req is None:
+                return
+            if self._worst_blocks(req) > kv.n_blocks - 1:
+                raise ValueError(
+                    f"{req.rid}: needs {self._worst_blocks(req)} blocks, pool "
+                    f"has {kv.n_blocks - 1} - raise n_blocks/block_size")
+            if self._worst_blocks(req) > kv.free_blocks - self._reserved(slots, kv):
+                q.requeue(req)  # backpressure: wait for a drain, keep FIFO
+                return
+            key, sub = jax.random.split(key)
+            slots[i] = self._prefill_slot(i, req, kv, sub)
+
+    def _prefill_slot(self, i: int, req: Request, kv: PagedKVCache,
+                      key) -> Slot:
+        bs = self.bcfg.block_size
+        tlen = len(req.prompt)
+        pad = (-tlen) % bs
+        toks = np.pad(req.prompt, (0, pad))[None]  # (1, S_pad)
+        logits, k, v = self._prefill(self.sp, jnp.asarray(toks),
+                                     jnp.asarray(tlen, jnp.int32),
+                                     cfg=self.cfg)
+        kv.write_prefill(i, k[:, 0], v[:, 0], tlen)
+        tok = int(self._sample_row(logits, key)[0])
+        now = self._now()
+        return Slot(req=req, pos=tlen, next_token=tok, out=[tok],
+                    t_admit=now, token_times=[now])
+
+    # -- main loop -----------------------------------------------------------
+
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def run(self, requests: List[Request]) -> ServeReport:
+        cfg, bcfg, scfg = self.cfg, self.bcfg, self.scfg
+        q = RequestQueue(requests)
+        kv = PagedKVCache(cfg, bcfg.n_slots, bcfg.n_blocks, bcfg.block_size)
+        slots: List[Optional[Slot]] = [None] * bcfg.n_slots
+        outputs: Dict[str, np.ndarray] = {}
+        ttft: List[float] = []
+        tpot: List[float] = []
+        key = jax.random.PRNGKey(scfg.seed)
+        n_steps = 0
+        self._t0 = time.monotonic()
+
+        def finish(i: int) -> None:
+            s = slots[i]
+            outputs[s.req.rid] = np.asarray(s.out, np.int32)
+            ttft.append(s.token_times[0] - max(s.req.arrival, 0.0))
+            tpot.extend(np.diff(s.token_times).tolist())
+            kv.free_slot(i)
+            slots[i] = None
+
+        while len(q) or any(s is not None for s in slots):
+            key, k_adm, k_dec = jax.random.split(key, 3)
+            self._admit(q, slots, kv, self._now(), k_adm)
+            # a request may be done straight out of prefill (max_new=1/EOS)
+            for i, s in enumerate(slots):
+                if s is not None and (s.done or s.next_token == scfg.eos_id):
+                    finish(i)
+            active = [i for i, s in enumerate(slots) if s is not None]
+            if not active:
+                if len(q):
+                    nxt = q.next_arrival()
+                    wait = 0.0 if nxt is None else nxt - self._now()
+                    if wait > 0:
+                        time.sleep(min(wait, bcfg.idle_wait_s))
+                continue
+
+            for i in active:
+                kv.ensure(i, slots[i].pos + 1)
+            nv = max(len(kv.tables[i]) for i in active)
+            nv = -(-nv // bcfg.view_bucket) * bcfg.view_bucket
+            views_k, views_v = kv.gather(nv)
+            pos = np.array([s.pos if s else 0 for s in slots], np.int32)
+            toks = np.array([[s.next_token if s else 0] for s in slots],
+                            np.int32)
+            logits, k_new, v_new = self._decode(
+                self.sp, views_k, views_v, jnp.asarray(pos),
+                jnp.asarray(toks), cfg=cfg)
+            pb, off = kv.write_coords(
+                [s.pos if s else None for s in slots])
+            kv.write_token(pb, off, k_new, v_new)
+            n_steps += 1
+            sampled = self._sample_row(logits, k_dec)
+            now = self._now()
+            for i in active:
+                s = slots[i]
+                s.pos += 1
+                tok = int(sampled[i])
+                s.out.append(tok)
+                s.token_times.append(now)
+                s.next_token = tok
+                if s.done or tok == scfg.eos_id:
+                    finish(i)
+
+        wall = self._now()
+        total = sum(len(o) for o in outputs.values())
+        rep = ServeReport(
+            n_requests=len(outputs), total_tokens=total, wall_s=wall,
+            n_decode_steps=n_steps, ttft_s=ttft, tpot_s=tpot,
+            outputs=outputs, kv_stats=kv.stats(),
+        )
+        rep._n_slots = bcfg.n_slots
+        return rep

@@ -1,0 +1,106 @@
+"""Engine generation paths beyond the single system-test call: EOS
+early-stop freezing finished rows, enc-dec cache replay, hybrid ring-buffer
+window, and prefix stability of the decode loop (cache padding must never
+change earlier tokens)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.serve import Engine, ServeConfig
+
+
+def _mk(arch, **over):
+    cfg = registry.get_smoke_config(arch, dtype="float32", **over)
+    fns = registry.model_fns(cfg)
+    params = fns.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _batch(cfg, B=2, S=6, seed=3):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_seq, cfg.d_model)) * 0.02, jnp.float32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_patches, cfg.d_model)) * 0.02, jnp.float32)
+    return batch
+
+
+def test_eos_freezes_finished_rows():
+    cfg, params = _mk("yi-6b")
+    batch = _batch(cfg)
+    free = Engine(cfg, params, ServeConfig(max_new_tokens=8)).generate(batch)
+    # pick an eos that row 0 emits mid-stream and row 1 never emits
+    eos = int(free[0, 3])
+    assert eos not in free[1].tolist(), "fixture assumption broke"
+    out = Engine(cfg, params, ServeConfig(max_new_tokens=8, eos_id=eos)).generate(batch)
+    # row 0: identical up to and including its eos, zero after
+    np.testing.assert_array_equal(out[0, :4], free[0, :4])
+    assert np.all(out[0, 4:] == 0), f"finished row kept writing: {out[0]}"
+    # row 1: untouched by row 0 finishing
+    np.testing.assert_array_equal(out[1], free[1])
+
+
+def test_eos_all_rows_stop_early():
+    cfg, params = _mk("yi-6b")
+    batch = _batch(cfg)
+    free = Engine(cfg, params, ServeConfig(max_new_tokens=4)).generate(batch)
+    # greedy first token of every row as eos => everything freezes at t=0
+    eng = Engine(cfg, params, ServeConfig(max_new_tokens=4, eos_id=int(free[0, 0])))
+    batch1 = {k: v[:1] for k, v in batch.items()}
+    out = eng.generate(batch1)
+    assert out.shape == (1, 4)
+    assert out[0, 0] == free[0, 0] and np.all(out[0, 1:] == 0)
+
+
+@pytest.mark.parametrize("arch", ["whisper-tiny", "zamba2-1.2b"])
+def test_generate_prefix_stable(arch):
+    """Tokens must not depend on how far the cache was padded: generate(4)
+    must be a prefix of generate(10). Exercises the encdec self-attn cache
+    replay (pad + copy path) and the hybrid shared-attn cache sizing."""
+    cfg, params = _mk(arch)
+    batch = _batch(cfg)
+    short = Engine(cfg, params, ServeConfig(max_new_tokens=4)).generate(batch)
+    long = Engine(cfg, params, ServeConfig(max_new_tokens=10)).generate(batch)
+    np.testing.assert_array_equal(short, long[:, :4])
+
+
+def test_hybrid_ring_buffer_window():
+    """With a window smaller than the total length the hybrid shared-attn
+    cache becomes a ring buffer; decoding must stay deterministic and
+    prefix-stable while wrapping."""
+    cfg, params = _mk("zamba2-1.2b", window=8)
+    batch = _batch(cfg, S=6)
+    scfg = ServeConfig(max_new_tokens=8)  # total 14 > window 8 => wraps
+    eng = Engine(cfg, params, scfg)
+    a = eng.generate(batch)
+    b = eng.generate(batch)
+    np.testing.assert_array_equal(a, b)
+    short = Engine(cfg, params, ServeConfig(max_new_tokens=3)).generate(batch)
+    np.testing.assert_array_equal(short, a[:, :3])
+
+
+def test_encdec_generate_deterministic_and_batch_consistent():
+    """Whisper: per-row results must not depend on batch composition
+    (validates the cross-attn KV replay is per-row independent)."""
+    cfg, params = _mk("whisper-tiny")
+    batch = _batch(cfg, B=2)
+    full = Engine(cfg, params, ServeConfig(max_new_tokens=5)).generate(batch)
+    solo = Engine(cfg, params, ServeConfig(max_new_tokens=5)).generate(
+        {k: v[:1] for k, v in batch.items()})
+    np.testing.assert_array_equal(full[:1], solo)
+
+
+def test_scfg_not_shared_between_engines():
+    """The old `scfg: ServeConfig = ServeConfig()` default was one shared
+    instance; mutating one engine's config must not leak into another."""
+    cfg, params = _mk("yi-6b")
+    e1 = Engine(cfg, params)
+    e2 = Engine(cfg, params)
+    assert e1.scfg is not e2.scfg
+    e1.scfg.max_new_tokens = 99
+    assert e2.scfg.max_new_tokens != 99
