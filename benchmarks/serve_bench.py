@@ -1,7 +1,8 @@
-"""Serving benchmark: static vs continuous batching vs compressed weights.
+"""Serving benchmark: static vs continuous batching vs compressed weights
+vs macro-mesh (tensor-parallel) compressed serving.
 
 One synthetic mixed-length trace (every 4th request decodes long, the rest
-short - the skew that makes a static batcher idle its lanes) served three
+short - the skew that makes a static batcher idle its lanes) served four
 ways on the smoke LM:
 
   * ``static``     - BatchServer with whole-batch admission (lanes drain
@@ -9,17 +10,25 @@ ways on the smoke LM:
   * ``continuous`` - the same server, slot-level admission into freed lanes;
   * ``compressed`` - continuous batching where every CIM projection runs on
     the int8 BSR Pallas kernel (``serve.deployed.compress`` with a
-    ``sched.search``-chosen tile).
+    ``sched.search``-chosen tile);
+  * ``sharded``    - the compressed server column-sharded over a forced
+    4-device host macro mesh (run in a subprocess so the device count can
+    be set before jax imports). On CPU fake devices this measures the
+    orchestration overhead, not a speedup - the row's purpose is the
+    contract: tokens bit-identical to single-device (``tokens_match``).
 
-All three share kernels and per-step cost, so static-vs-continuous isolates
-the scheduling policy. Each engine is warmed on the identical trace first
-(shape buckets compile once); the reported run is jit-warm. Results land in
-``BENCH_serve.json`` with TTFT / per-token-latency percentiles.
+The single-host engines share kernels and per-step cost, so static-vs-
+continuous isolates the scheduling policy. Each engine is warmed on the
+identical trace first (shape buckets compile once); the reported run is
+jit-warm. Results land in ``BENCH_serve.json`` with TTFT / per-token-latency
+percentiles.
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 
 import jax
 import numpy as np
@@ -30,12 +39,15 @@ from repro.serve import deployed as DP
 from repro.launch.serve import synthetic_trace
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 ARCH = "yi-6b"
 N_REQUESTS = 12
 MAX_PROMPT = 20
 MAX_NEW = 36
 TARGET_SPARSITY = 0.6
+SHARD_DEVICES = 4
+SHARD_TILE = (16, 16)  # small tile -> enough block columns to split
 
 
 def _serve(cfg, sp, continuous: bool, trace_fn, repeats: int = 2):
@@ -49,6 +61,72 @@ def _serve(cfg, sp, continuous: bool, trace_fn, repeats: int = 2):
         if best is None or rep.tokens_per_s > best.tokens_per_s:
             best = rep
     return best
+
+
+def _row(name: str, j: dict) -> dict:
+    return {
+        "name": f"serve_{name}",
+        "tokens_per_s": j["tokens_per_s"],
+        "ttft_p50_ms": round(j["ttft"]["p50"] * 1e3, 2),
+        "ttft_p99_ms": round(j["ttft"]["p99"] * 1e3, 2),
+        "tpot_p50_ms": round(j["tpot"]["p50"] * 1e3, 2),
+        "tpot_p99_ms": round(j["tpot"]["p99"] * 1e3, 2),
+        "slot_efficiency": j["slot_efficiency"],
+    }
+
+
+def sharded_worker():
+    """Runs inside a subprocess with SHARD_DEVICES forced host devices:
+    serves the benchmark trace single-device and macro-sharded, checks
+    bit-identical tokens, prints the sharded report JSON on the last line."""
+    from repro.launch.shardings import macro_mesh
+
+    cfg = registry.get_smoke_config(ARCH, dtype="float32")
+    params = registry.model_fns(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    spc = DP.compress(cfg, params, target_sparsity=TARGET_SPARSITY,
+                      tile=SHARD_TILE)
+    trace_fn = lambda: synthetic_trace(cfg, N_REQUESTS, MAX_PROMPT, MAX_NEW)
+    single = _serve(cfg, spc, True, trace_fn, repeats=1)
+
+    mesh = macro_mesh(SHARD_DEVICES)
+    sps = DP.shard(spc, mesh)
+    n_sharded = sum(1 for dw in sps.deployed().values() if dw.mesh is not None)
+    srv = BatchServer(cfg, sps, ServeConfig(),
+                      BatchConfig(n_slots=4, block_size=8, n_blocks=64),
+                      continuous=True, mesh=mesh)
+    srv.run(trace_fn())  # compile
+    rep = srv.run(trace_fn())
+    match = all(np.array_equal(rep.outputs[r.rid], single.outputs[r.rid])
+                for r in trace_fn())
+    out = rep.to_json()
+    out["n_devices"] = SHARD_DEVICES
+    out["n_sharded_projections"] = n_sharded
+    out["tile"] = list(SHARD_TILE)
+    out["tokens_match_single_device"] = match
+    print(json.dumps(out))
+
+
+def _sharded_report():
+    """Spawn the worker with the forced device count (XLA_FLAGS must be set
+    before jax imports, so it cannot run in this process)."""
+    env = dict(os.environ)
+    # forced host devices only exist on the CPU backend: pin the platform
+    # (else a GPU host's backend wins and macro_mesh(4) has 1 device) and
+    # append to - don't clobber - any flags the caller set
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = " ".join(
+        ([env["XLA_FLAGS"]] if env.get("XLA_FLAGS") else [])
+        + [f"--xla_force_host_platform_device_count={SHARD_DEVICES}"])
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), REPO]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.serve_bench import sharded_worker; sharded_worker()"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=1200)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded worker failed:\n{r.stdout}\n{r.stderr}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def run():
@@ -66,6 +144,7 @@ def run():
         "continuous": _serve(cfg, sp, True, trace_fn),
         "compressed": _serve(cfg, spc, True, trace_fn),
     }
+    sharded = _sharded_report()
 
     report = {
         "arch": cfg.name,
@@ -77,22 +156,15 @@ def run():
             reports["continuous"].tokens_per_s
             / max(reports["static"].tokens_per_s, 1e-9), 3),
         **{k: v.to_json() for k, v in reports.items()},
+        "sharded": sharded,
     }
     with open(os.path.abspath(OUT_PATH), "w") as f:
         json.dump(report, f, indent=1)
 
-    rows = []
-    for name, rep in reports.items():
-        j = rep.to_json()
-        rows.append({
-            "name": f"serve_{name}",
-            "tokens_per_s": j["tokens_per_s"],
-            "ttft_p50_ms": round(j["ttft"]["p50"] * 1e3, 2),
-            "ttft_p99_ms": round(j["ttft"]["p99"] * 1e3, 2),
-            "tpot_p50_ms": round(j["tpot"]["p50"] * 1e3, 2),
-            "tpot_p99_ms": round(j["tpot"]["p99"] * 1e3, 2),
-            "slot_efficiency": j["slot_efficiency"],
-        })
+    rows = [_row(name, rep.to_json()) for name, rep in reports.items()]
+    srow = _row("sharded_macro%d" % SHARD_DEVICES, sharded)
+    srow["tokens_match"] = sharded["tokens_match_single_device"]
+    rows.append(srow)
     rows.append({
         "name": "serve_continuous_speedup",
         "vs_static": report["speedup_continuous_vs_static"],

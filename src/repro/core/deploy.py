@@ -10,13 +10,15 @@ replacement for ``cim_matmul``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import ops
+from ..kernels.cim_bsr_matmul import MACRO_AXIS
 from . import quant as Q
 from . import sparsity as S
 from .cim_layer import CIMConfig
@@ -29,12 +31,20 @@ class DeployedWeight:
     Registered as a jax pytree so a whole model of packed projections can be
     passed through ``jit`` (the serving engines do exactly that); the block
     arrays are the leaves, the geometry is static aux data.
+
+    ``mesh`` is None for single-device serving. After ``shard_weight`` it
+    holds the macro-cluster mesh: each packed dict's block-column axis is
+    then permuted into device order (equal-cardinality LPT shards), laid
+    out over the mesh's ``macro`` axis, and carries a ``col_inv`` index
+    that restores the original column order after the sharded kernel's
+    all-gather.
     """
 
     packed: List[dict]  # one kernel dict per stacked layer
     d_in: int
     d_out: int
     bits: int
+    mesh: Optional[Mesh] = None
 
     @property
     def density(self) -> float:
@@ -55,7 +65,7 @@ class DeployedWeight:
 
 jax.tree_util.register_pytree_node(
     DeployedWeight,
-    lambda dw: ((dw.packed,), (dw.d_in, dw.d_out, dw.bits)),
+    lambda dw: ((dw.packed,), (dw.d_in, dw.d_out, dw.bits, dw.mesh)),
     lambda aux, ch: DeployedWeight(ch[0], *aux),
 )
 
@@ -91,20 +101,88 @@ def deploy_weight(w, cim: CIMConfig, bk: int = 128, bn: int = 128,
     return DeployedWeight(packed, stacked.shape[-2], stacked.shape[-1], bits)
 
 
+def shardable_columns(dw: DeployedWeight, n_devices: int) -> bool:
+    """True when every stacked layer's block-column count splits evenly
+    over ``n_devices`` - the precondition for equal-shaped macro shards."""
+    return all(int(p["blocks"].shape[0]) % n_devices == 0 for p in dw.packed)
+
+
+def deployed_weight_specs(axis: str = MACRO_AXIS) -> Dict[str, P]:
+    """PartitionSpecs for one macro-sharded packed projection dict - the
+    layout contract ``shard_weight`` applies: block-column axis over the
+    macro cluster, the un-permute index replicated."""
+    return {
+        "blocks": P(axis, None, None, None),
+        "scales": P(axis, None),
+        "row_idx": P(axis, None),
+        "nnz": P(axis),
+        "col_inv": P(),
+        "density": P(),
+    }
+
+
+def shard_weight(dw: DeployedWeight, mesh: Mesh, axis: str = MACRO_AXIS,
+                 assign: Optional[Callable] = None) -> DeployedWeight:
+    """Column-shard a packed projection over the serving macro cluster.
+
+    ``assign(nnz_counts, n_devices) -> (go,) device ids`` chooses which
+    block columns live on which device (``sched.allocate.device_assignment``
+    is the LPT policy; None = contiguous split). The packed arrays are
+    permuted into device order on the column axis, ``device_put`` with the
+    leading axis over ``mesh[axis]``, and a replicated ``col_inv`` records
+    how to restore the original column order after the kernel's all-gather.
+    Non-divisible projections are returned unchanged (served replicated) -
+    sharding must never change which weights exist, only where they live.
+    """
+    n_dev = int(mesh.shape[axis])
+    if dw.mesh is not None or n_dev <= 1 or not shardable_columns(dw, n_dev):
+        return dw
+    specs = deployed_weight_specs(axis)
+    packed = []
+    for p in dw.packed:
+        counts = np.asarray(p["nnz"])
+        go = counts.shape[0]
+        if assign is None:
+            dev = np.repeat(np.arange(n_dev), go // n_dev)
+        else:
+            dev = np.asarray(assign(counts, n_dev))
+        perm = np.concatenate([np.flatnonzero(dev == d) for d in range(n_dev)])
+        inv = np.argsort(perm)
+        q = {k: np.asarray(p[k])[perm]
+             for k in ("blocks", "scales", "row_idx", "nnz")}
+        q["col_inv"] = np.asarray(inv, np.int32)
+        packed.append({
+            **{k: jax.device_put(jnp.asarray(v),
+                                 NamedSharding(mesh, specs[k]))
+               for k, v in q.items()},
+            "density": p["density"],
+        })
+    return DeployedWeight(packed, dw.d_in, dw.d_out, dw.bits, mesh=mesh)
+
+
 def deployed_matmul(x: jnp.ndarray, dw: DeployedWeight, layer: int = 0,
                     a_bits: int = 0, interpret: Optional[bool] = None
                     ) -> jnp.ndarray:
     """Serving-path matmul: eq.5 activation quant + BSR kernel.
 
     x: (..., d_in). The zero blocks dropped at packing are never fetched
-    or multiplied - MARS §III.B on the MXU.
+    or multiplied - MARS §III.B on the MXU. When ``dw`` is macro-sharded,
+    each device runs the kernel on its resident block columns only and the
+    all-gathered output is un-permuted back to the logical column order.
     """
     if a_bits:
         x = Q.quantize_activation(x.astype(jnp.float32), a_bits, signed=True)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, dw.d_in)
-    y = ops.bsr_matmul(x2, dw.packed[layer],
-                       bm=max(8, min(128, x2.shape[0])), interpret=interpret)
+    bm = max(8, min(128, x2.shape[0]))
+    if dw.mesh is not None:
+        p = dw.packed[layer]
+        go, _, _, bn = p["blocks"].shape
+        y = ops.bsr_matmul_sharded(x2, p, dw.mesh, bm=bm, interpret=interpret)
+        y = jnp.take(y.reshape(-1, go, bn), p["col_inv"], axis=1)
+        y = y.reshape(-1, dw.d_out)
+    else:
+        y = ops.bsr_matmul(x2, dw.packed[layer], bm=bm, interpret=interpret)
     return y.reshape(*lead, dw.d_out).astype(x.dtype)
 
 

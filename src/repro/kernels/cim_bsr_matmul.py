@@ -26,6 +26,12 @@ Layout (column-major ELL, from core.mapping.pack_bsr):
 
 Grid = (M/bm, go, nnz_max); the slot axis is innermost so each output tile
 stays resident in VMEM across its accumulation.
+
+``bsr_matmul_sharded`` is the multi-macro form: the ``go`` block-column
+axis is split over a ``macro`` mesh axis (one shard per device, the way one
+MARS layer spans several SRAM macros), each device runs the SAME kernel on
+only its resident columns, and a single tiled all-gather at the projection
+boundary reassembles the (M, N) output - no cross-device weight traffic.
 """
 from __future__ import annotations
 
@@ -35,9 +41,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..compat import shard_map
 
 
 DEFAULT_BM = 128
+
+MACRO_AXIS = "macro"  # mesh axis name for the serving macro cluster
 
 
 def _kernel(row_idx_ref, nnz_ref, x_ref, blocks_ref, scales_ref, out_ref,
@@ -89,3 +100,33 @@ def bsr_matmul(x: jnp.ndarray, blocks: jnp.ndarray, scales: jnp.ndarray,
         interpret=interpret,
     )(row_idx, nnz, x, blocks, scales.astype(acc_dtype))
     return out[:m]
+
+
+def bsr_matmul_sharded(x: jnp.ndarray, blocks: jnp.ndarray,
+                       scales: jnp.ndarray, row_idx: jnp.ndarray,
+                       nnz: jnp.ndarray, *, mesh: Mesh,
+                       axis: str = MACRO_AXIS, bm: int = DEFAULT_BM,
+                       interpret: bool = True,
+                       acc_dtype=jnp.float32) -> jnp.ndarray:
+    """Tensor-parallel ``bsr_matmul`` over the ``axis`` mesh dimension.
+
+    The block-column axis (``go``) of blocks/scales/row_idx/nnz is sharded
+    over the mesh; ``x`` is replicated (every device holds the full K, so
+    ``row_idx`` needs no translation). Each device accumulates only its
+    resident columns' slots - the per-device ``nnz`` is its own macro
+    occupancy - and one tiled all-gather on the N axis is the only
+    collective. Output is the replicated (M, go*bn), columns in DEVICE
+    order: callers that column-permuted the packing (LPT balancing) must
+    un-permute with their ``col_inv``.
+    """
+    def _local(xl, b, s, ri, nz):
+        y = bsr_matmul(xl, b, s, ri, nz, bm=bm, interpret=interpret,
+                       acc_dtype=acc_dtype)
+        return jax.lax.all_gather(y, axis, axis=1, tiled=True)
+
+    f = shard_map(
+        _local, mesh=mesh,
+        in_specs=(P(), P(axis, None, None, None), P(axis, None),
+                  P(axis, None), P(axis)),
+        out_specs=P(), check_vma=False)
+    return f(x, blocks, scales, row_idx, nnz)

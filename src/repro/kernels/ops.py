@@ -57,6 +57,20 @@ def bsr_matmul(x, packed: dict, bm: int = 128, interpret: bool | None = None):
     )
 
 
+def bsr_matmul_sharded(x, packed: dict, mesh, bm: int = 128,
+                       interpret: bool | None = None,
+                       axis: str = cim_bsr_matmul.MACRO_AXIS):
+    """Macro-cluster tensor-parallel bsr_matmul over a column-sharded
+    packed dict (see ``core.deploy.shard_weight``). Output columns are in
+    device order - the caller un-permutes with ``packed['col_inv']``."""
+    if interpret is None:
+        interpret = default_interpret()
+    return cim_bsr_matmul.bsr_matmul_sharded(
+        x, packed["blocks"], packed["scales"], packed["row_idx"], packed["nnz"],
+        mesh=mesh, axis=axis, bm=bm, interpret=interpret,
+    )
+
+
 def quant_matmul(x, w_int8, scale, interpret: bool | None = None, **kw):
     if interpret is None:
         interpret = default_interpret()

@@ -7,6 +7,11 @@
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
       --compressed --target-sparsity 0.5
 
+  # tensor-parallel compressed decode over a 4-device macro cluster
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
+      --compressed --mesh macro=4 --tile 16x16
+
   # legacy static-batch Engine (any registry family)
   PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b --smoke \\
       --engine legacy --batch 4 --prompt-len 16 --new-tokens 32
@@ -66,17 +71,46 @@ def synthetic_trace(cfg, n_requests: int, max_prompt: int, max_new: int,
     return reqs
 
 
+def _parse_mesh(spec):
+    """'macro=N' -> a macro_mesh(N); None -> single-device serving."""
+    if not spec:
+        return None
+    from .shardings import macro_mesh
+    axis, _, n = spec.partition("=")
+    if axis != "macro" or not n.isdigit():
+        raise SystemExit(f"--mesh expects macro=N, got {spec!r}")
+    return macro_mesh(int(n))
+
+
+def _parse_tile(spec):
+    if not spec:
+        return None
+    bk, _, bn = spec.lower().partition("x")
+    if not (bk.isdigit() and bn.isdigit() and int(bk) > 0 and int(bn) > 0):
+        raise SystemExit(f"--tile expects BKxBN (e.g. 16x16), got {spec!r}")
+    return (int(bk), int(bn))
+
+
 def _batch(args, cfg, params):
+    mesh = _parse_mesh(args.mesh)
     sp = (deployed.compress(cfg, params, target_sparsity=args.target_sparsity,
-                            schedule=deployed.default_schedule(cfg))
+                            schedule=(None if args.tile else
+                                      deployed.default_schedule(cfg)),
+                            tile=_parse_tile(args.tile))
           if args.compressed else deployed.from_params(cfg, params))
     if args.compressed:
         print("compression:", json.dumps(sp.report()))
+    if mesh is not None:
+        sp = deployed.shard(sp, mesh)
+        n_sharded = sum(1 for dw in sp.deployed().values()
+                        if dw.mesh is not None)
+        print(f"macro mesh: {mesh.shape} - {n_sharded} projections "
+              "column-sharded (rest replicated)")
     bcfg = BatchConfig(n_slots=args.slots, block_size=args.block_size,
                        n_blocks=args.kv_blocks)
     srv = BatchServer(cfg, sp, ServeConfig(temperature=args.temperature,
                                            seed=args.seed), bcfg,
-                      continuous=(args.engine == "batch"))
+                      continuous=(args.engine == "batch"), mesh=mesh)
     trace = lambda: synthetic_trace(cfg, args.requests, args.prompt_len,
                                     args.new_tokens, seed=args.seed)
     srv.run(trace())  # compile
@@ -96,6 +130,12 @@ def main(argv=None):
                     "same server, whole-batch admission; legacy = Engine")
     ap.add_argument("--compressed", action="store_true",
                     help="serve deploy_weight-packed (BSR) projections")
+    ap.add_argument("--mesh", default="",
+                    help="macro=N: shard compressed projections column-wise "
+                    "and KV heads over an N-device macro cluster")
+    ap.add_argument("--tile", default="",
+                    help="BKxBN packing tile override (e.g. 16x16); default "
+                    "is the searched schedule's tile")
     ap.add_argument("--target-sparsity", type=float, default=0.5)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)

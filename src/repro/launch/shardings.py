@@ -16,13 +16,49 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..kernels.cim_bsr_matmul import MACRO_AXIS
 from ..models.config import ModelConfig, ShapeConfig
 
 
 def data_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Serving: the macro-cluster mesh (tensor-parallel compressed decode)
+# ---------------------------------------------------------------------------
+
+
+def macro_mesh(n: Optional[int] = None) -> Mesh:
+    """1-D serving mesh whose ``macro`` axis plays the MARS macro cluster:
+    every DeployedWeight's block columns are split over it. ``n`` defaults
+    to every visible device."""
+    devs = jax.devices()
+    n = len(devs) if n is None else int(n)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"macro mesh of {n} devices, host has {len(devs)}")
+    return Mesh(np.asarray(devs[:n]), (MACRO_AXIS,))
+
+
+def deployed_weight_specs() -> dict:
+    """PartitionSpecs for one BSR-packed projection dict - delegates to
+    ``core.deploy.deployed_weight_specs``, the single source of truth
+    ``shard_weight`` applies."""
+    from ..core.deploy import deployed_weight_specs as _specs
+    return _specs(MACRO_AXIS)
+
+
+def serve_kv_view_spec(cfg: ModelConfig, mesh: Mesh) -> P:
+    """Spec for the gathered paged-KV views (L, B, Sv, KV, dh): heads over
+    the macro axis when divisible, else replicated (correctness first).
+    Delegates to ``serve.batching.kv_view_spec``, which PagedKVCache
+    consumes."""
+    from ..serve.batching import kv_view_spec
+    spec = kv_view_spec(cfg, mesh)
+    return spec if spec is not None else P()
 
 
 def _attn_layer_specs(cfg: ModelConfig, stacked: bool, model_n: int = 16,

@@ -7,7 +7,8 @@ space for a faster tiling (``search``), and execute the winner on the real
 Pallas BSR path with the same artifact (``executor``).
 """
 from .allocate import (CoreAssignment, LayerAllocation, allocate_counts,
-                       allocate_node, allocate_packing, verify_conservation)
+                       allocate_node, allocate_packing, device_assignment,
+                       verify_conservation)
 from .graph import (LayerGraph, LayerNode, attach_weights, graph_from_layers,
                     lm_graph, resnet18_graph, vgg16_graph)
 from .executor import (LayerSchedule, NetworkSchedule, build_schedule,
@@ -19,7 +20,7 @@ from .simulate import SimEvent, SimResult, cross_validate, simulate
 
 __all__ = [
     "CoreAssignment", "LayerAllocation", "allocate_counts", "allocate_node",
-    "allocate_packing", "verify_conservation",
+    "allocate_packing", "device_assignment", "verify_conservation",
     "LayerGraph", "LayerNode", "attach_weights", "graph_from_layers",
     "lm_graph", "resnet18_graph", "vgg16_graph",
     "LayerSchedule", "NetworkSchedule", "build_schedule", "deploy_layer",

@@ -131,6 +131,41 @@ def allocate_packing(p: GroupsetPacking, hw: HardwareConfig = DEFAULT_HW,
     return allocate_counts(counts, hw, w_bits, group, alpha, name=name)
 
 
+def device_assignment(counts: Sequence[int], n_devices: int) -> np.ndarray:
+    """Kernel-group columns -> serving devices: the LPT policy of
+    ``allocate_counts``, constrained to equal cardinality per device.
+
+    The TPU serving mesh plays the role of the macro cluster, but unlike
+    the paper's cores a ``shard_map`` shard must hold the SAME number of
+    block columns on every device (equal-shaped shards). So: columns sorted
+    by descending surviving-block count, each placed on the least-loaded
+    device that still has column slots free. Requires
+    ``len(counts) % n_devices == 0``; returns the (n_columns,) device id
+    per column. Every column is placed exactly once, every device owns
+    exactly ``n_columns / n_devices`` columns, and the nnz imbalance is
+    never worse than the contiguous split's.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    go = counts.shape[0]
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if go % n_devices:
+        raise ValueError(
+            f"{go} kernel-group columns do not split evenly over "
+            f"{n_devices} devices")
+    slots = go // n_devices
+    loads = np.zeros(n_devices, dtype=np.int64)
+    owned = np.zeros(n_devices, dtype=np.int64)
+    dev = np.zeros(go, dtype=np.int32)
+    for j in np.argsort(-counts, kind="stable"):
+        open_devs = np.flatnonzero(owned < slots)
+        d = open_devs[np.argmin(loads[open_devs])]
+        dev[j] = d
+        loads[d] += counts[j]
+        owned[d] += 1
+    return dev
+
+
 def verify_conservation(alloc: LayerAllocation) -> bool:
     """Every surviving group-set placed exactly once; waves cover loads."""
     if alloc.placed != alloc.nnz_total:

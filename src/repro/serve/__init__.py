@@ -6,6 +6,11 @@
     the decode hot path.
   * :mod:`batching` / :class:`BatchServer` - continuous batching with a
     paged (block-allocated) KV cache and slot-level admission.
+  * ``deployed.shard`` + ``BatchServer(mesh=...)`` - tensor-parallel
+    compressed serving over a ``macro`` mesh axis (the TPU stand-in for the
+    MARS multi-macro cluster): projections column-sharded with the
+    scheduler's LPT assignment, KV views sharded heads-wise, bit-identical
+    tokens to single-device serving.
 """
 from . import batching, deployed, server  # noqa: F401
 from .batching import PagedKVCache, Request, RequestQueue  # noqa: F401

@@ -23,10 +23,26 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..kernels.cim_bsr_matmul import MACRO_AXIS
 from ..models.config import ModelConfig
+
+
+def kv_view_spec(cfg: ModelConfig, mesh: Mesh) -> Optional[P]:
+    """PartitionSpec for the gathered paged-KV views (L, B, Sv, KV, dh):
+    heads over the ``macro`` axis when the KV-head count divides it, else
+    None (serve replicated - correctness first). The single source of truth
+    for whether macro serving shards KV."""
+    if MACRO_AXIS not in mesh.axis_names:
+        return None
+    n_dev = int(mesh.shape[MACRO_AXIS])
+    if n_dev > 1 and cfg.n_kv_heads_eff % n_dev == 0:
+        return P(None, None, None, MACRO_AXIS, None)
+    return None
 
 
 @dataclasses.dataclass
@@ -111,13 +127,20 @@ class PagedKVCache:
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, n_blocks: int,
-                 block_size: int, dtype=None):
+                 block_size: int, dtype=None, mesh: Optional[Mesh] = None):
         if n_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is scratch)")
         self.cfg = cfg
         self.n_slots = n_slots
         self.n_blocks = n_blocks
         self.block_size = block_size
+        # macro-cluster serving: gathered views are sharded heads-wise over
+        # the mesh when KV heads divide it, so each device attends only its
+        # resident heads (and holds only 1/N of every block)
+        self.mesh = mesh
+        spec = None if mesh is None else kv_view_spec(cfg, mesh)
+        self._view_sharding = (None if spec is None
+                               else NamedSharding(mesh, spec))
         shape = (n_blocks, cfg.n_layers, block_size, cfg.n_kv_heads_eff, cfg.dh)
         # host numpy, written IN PLACE: a functional .at[].set would copy
         # the whole pool per token, re-creating the max-len-copy cost the
@@ -154,6 +177,7 @@ class PagedKVCache:
             "allocations": self.n_alloc,
             "reused_blocks": self.n_reused,
             "peak_blocks": self.peak_blocks,
+            "kv_heads_sharded": self._view_sharding is not None,
         }
 
     # -- allocation ---------------------------------------------------------
@@ -214,7 +238,10 @@ class PagedKVCache:
         def _g(pool):
             g = pool[tbl]  # (B, n_view, L, bs, KV, dh)
             g = g.transpose(2, 0, 1, 3, 4, 5)
-            return jnp.asarray(g.reshape(L, self.n_slots, n_view * bs, kvh, dh))
+            out = jnp.asarray(g.reshape(L, self.n_slots, n_view * bs, kvh, dh))
+            if self._view_sharding is not None:
+                out = jax.device_put(out, self._view_sharding)
+            return out
 
         return _g(self.pool_k), _g(self.pool_v)
 

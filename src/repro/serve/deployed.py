@@ -114,24 +114,27 @@ def default_schedule(cfg: ModelConfig, seq_len: int = 128,
 
 def compress(cfg: ModelConfig, params: dict,
              target_sparsity: Optional[float] = None,
-             schedule: Optional[NetworkSchedule] = None) -> ServingParams:
+             schedule: Optional[NetworkSchedule] = None,
+             tile: Optional[Tuple[int, int]] = None) -> ServingParams:
     """Pack every CIM-mapped 2-D projection for the BSR kernel.
 
     ``schedule`` (from ``sched.search`` over ``lm_graph(cfg)``) supplies the
-    per-projection tile; without one, the model's ``cim_alpha`` tile is used
-    (clipped to exact divisors). MoE expert stacks (3-D) and norm gains stay
-    dense. ``target_sparsity=0`` packs every block (no pruning) - the
-    numerically-honest configuration that must reproduce dense-math tokens.
+    per-projection tile; without one, ``tile`` (or the model's ``cim_alpha``)
+    is used (clipped to exact divisors). MoE expert stacks (3-D) and norm
+    gains stay dense. ``target_sparsity=0`` packs every block (no pruning) -
+    the numerically-honest configuration that must reproduce dense-math
+    tokens.
     """
     sp = from_params(cfg, params)
     cim = cfg.cim
     tiles = {}
     if schedule is not None:
         tiles = {s.name: (s.group, s.alpha) for s in schedule.layers}
+    fallback = tile if tile is not None else (cfg.cim_alpha, cfg.cim_alpha)
 
     def pack(name: str, w) -> D.DeployedWeight:
         d_in, d_out = int(w.shape[-2]), int(w.shape[-1])
-        g, a = tiles.get(name, (cfg.cim_alpha, cfg.cim_alpha))
+        g, a = tiles.get(name, fallback)
         bk, bn = D.fit_tile(d_in, d_out, g, a)
         return D.deploy_weight(w, cim, bk=bk, bn=bn,
                                target_sparsity=target_sparsity)
@@ -145,6 +148,32 @@ def compress(cfg: ModelConfig, params: dict,
     if sp.head is not None:
         sp.head = pack("head", sp.head)
     return sp
+
+
+def shard(sp: ServingParams, mesh) -> ServingParams:
+    """Lay a compressed model over the serving macro cluster.
+
+    Every :class:`~repro.core.deploy.DeployedWeight` is column-sharded over
+    the mesh's ``macro`` axis with the SAME LPT policy the scheduler uses to
+    balance kernel-groups over macros (``sched.allocate.device_assignment``
+    on the per-column surviving-block counts). Projections whose column
+    count does not divide the axis stay replicated - sharding never changes
+    which blocks exist, so tokens are bit-identical to single-device
+    serving. Dense leaves (embed, norms, MoE stacks) stay replicated.
+    """
+    from ..sched.allocate import device_assignment
+
+    def maybe(v):
+        if isinstance(v, D.DeployedWeight):
+            return D.shard_weight(v, mesh, assign=device_assignment)
+        return v
+
+    return ServingParams(
+        embed=sp.embed, final_ln=sp.final_ln,
+        layers=[{k: maybe(v) for k, v in p.items()} for p in sp.layers],
+        head=maybe(sp.head) if sp.head is not None else None,
+        mm_proj=sp.mm_proj,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -27,10 +27,12 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
+from ..kernels.cim_bsr_matmul import MACRO_AXIS
 from ..models.config import ModelConfig
 from . import deployed
-from .batching import PagedKVCache, Request, RequestQueue, Slot
+from .batching import PagedKVCache, Request, RequestQueue, Slot, kv_view_spec
 from .engine import ServeConfig, sample_tokens
 
 
@@ -38,6 +40,11 @@ from .engine import ServeConfig, sample_tokens
 class BatchConfig:
     n_slots: int = 4
     block_size: int = 8
+    # KV block budget PER DEVICE: when a macro-mesh server shards every
+    # block's heads over N devices, the same per-device memory holds N x
+    # blocks and the pool scales to n_blocks * N; if the heads do NOT
+    # divide the mesh the views stay replicated and the pool stays at
+    # n_blocks (scaling it would overrun every device's budget N-fold)
     n_blocks: int = 64
     # round the gathered view up to a multiple of this many blocks so jit
     # recompiles O(log) times instead of once per sequence-length block
@@ -46,9 +53,12 @@ class BatchConfig:
 
 
 def _percentiles(xs: List[float]) -> dict:
-    if not xs:
+    """Latency percentiles; empty or non-finite-only traces (a run that
+    decoded nothing) report zeros instead of NaN-poisoning the benchmark
+    JSON."""
+    a = np.asarray([x for x in xs if np.isfinite(x)], np.float64)
+    if a.size == 0:
         return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
-    a = np.asarray(xs)
     return {"p50": float(np.percentile(a, 50)),
             "p99": float(np.percentile(a, 99)),
             "mean": float(a.mean())}
@@ -69,7 +79,11 @@ class ServeReport:
 
     @property
     def tokens_per_s(self) -> float:
-        return self.total_tokens / max(self.wall_s, 1e-9)
+        """0.0 for an empty trace or a zero-duration run (nothing decoded
+        in no time is throughput 0, not 0/0)."""
+        if self.total_tokens == 0 or self.wall_s <= 0.0:
+            return 0.0
+        return self.total_tokens / self.wall_s
 
     _n_slots: int = 1
 
@@ -77,9 +91,9 @@ class ServeReport:
     def slot_efficiency(self) -> float:
         """Fraction of decoded lanes that produced a kept token (prefill
         emits each request's first token, so those don't count)."""
-        if self.n_decode_steps == 0:
+        if self.n_decode_steps == 0 or self._n_slots < 1:
             return 1.0
-        return min(1.0, (self.total_tokens - self.n_requests)
+        return min(1.0, max(0.0, self.total_tokens - self.n_requests)
                    / (self.n_decode_steps * self._n_slots))
 
     def to_json(self) -> dict:
@@ -102,7 +116,12 @@ class BatchServer:
     def __init__(self, cfg: ModelConfig, sp: deployed.ServingParams,
                  scfg: Optional[ServeConfig] = None,
                  bcfg: Optional[BatchConfig] = None,
-                 continuous: bool = True):
+                 continuous: bool = True, mesh: Optional[Mesh] = None):
+        """``mesh`` (with a ``macro`` axis) turns on macro-cluster serving:
+        pass ``deployed.shard(sp, mesh)`` as ``sp`` so projections run
+        tensor-parallel, the gathered KV views are sharded heads-wise, and
+        the block pool scales to ``bcfg.n_blocks`` per device. The loop
+        itself is unchanged - 1 and N devices run the same code."""
         if cfg.family == "vlm":
             raise NotImplementedError(
                 "BatchServer serves token-only requests; vlm prefill needs "
@@ -113,6 +132,14 @@ class BatchServer:
         self.scfg = scfg if scfg is not None else ServeConfig()
         self.bcfg = bcfg if bcfg is not None else BatchConfig()
         self.continuous = continuous
+        self.mesh = mesh
+        self.n_devices = (int(mesh.shape[MACRO_AXIS])
+                          if mesh is not None and MACRO_AXIS in mesh.axis_names
+                          else 1)
+        # pool scaling is earned by head sharding, not by device count
+        self._kv_scale = (self.n_devices
+                          if mesh is not None
+                          and kv_view_spec(cfg, mesh) is not None else 1)
         self._prefill = jax.jit(deployed.prefill_last, static_argnames=("cfg",))
         self._decode = jax.jit(deployed.decode_step_paged,
                                static_argnames=("cfg",))
@@ -177,7 +204,8 @@ class BatchServer:
     def run(self, requests: List[Request]) -> ServeReport:
         cfg, bcfg, scfg = self.cfg, self.bcfg, self.scfg
         q = RequestQueue(requests)
-        kv = PagedKVCache(cfg, bcfg.n_slots, bcfg.n_blocks, bcfg.block_size)
+        kv = PagedKVCache(cfg, bcfg.n_slots, bcfg.n_blocks * self._kv_scale,
+                          bcfg.block_size, mesh=self.mesh)
         slots: List[Optional[Slot]] = [None] * bcfg.n_slots
         outputs: Dict[str, np.ndarray] = {}
         ttft: List[float] = []
@@ -239,10 +267,12 @@ class BatchServer:
 
         wall = self._now()
         total = sum(len(o) for o in outputs.values())
+        stats = kv.stats()
+        stats["n_devices"] = self.n_devices
         rep = ServeReport(
             n_requests=len(outputs), total_tokens=total, wall_s=wall,
             n_decode_steps=n_steps, ttft_s=ttft, tpot_s=tpot,
-            outputs=outputs, kv_stats=kv.stats(),
+            outputs=outputs, kv_stats=stats,
         )
         rep._n_slots = bcfg.n_slots
         return rep

@@ -1,14 +1,18 @@
-"""Deployment path: QAT-sim oracle == BSR-kernel serving path, plus the
-Table IV-style storage accounting on a trained LM."""
+"""Deployment path: QAT-sim oracle == BSR-kernel serving path, the packing
+round-trip / kernel differential suite over randomized shapes, tilings and
+sparsity levels, plus the Table IV-style storage accounting on a trained
+LM."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import deploy
+from repro.core import mapping as M
 from repro.core.cim_layer import CIMConfig
 from repro.core.quant import QuantConfig
 from repro.core.sparsity import SparsityConfig
+from repro.kernels import cim_bsr_matmul as K
 from repro.models import registry
 
 
@@ -35,6 +39,115 @@ def test_deployed_matmul_matches_reference(w_bits, ts):
                                rtol=1e-4, atol=1e-4)
     if ts > 0:
         assert dw.density < 1.0  # blocks actually dropped
+
+
+# ---------------------------------------------------------------------------
+# pack_bsr <-> bsr_to_dense round-trip and kernel differential, randomized
+# over shapes, tilings and sparsity (seeded; the hypothesis variants live in
+# tests/test_properties.py)
+# ---------------------------------------------------------------------------
+
+
+def _block_sparse(rng, gi, go, bk, bn, density):
+    keep = rng.random((gi, go)) < density
+    w = rng.standard_normal((gi * bk, go * bn)).astype(np.float32)
+    return w * np.repeat(np.repeat(keep, bk, 0), bn, 1), keep
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pack_bsr_roundtrip_randomized(seed):
+    rng = np.random.default_rng(seed)
+    bk, bn = int(rng.choice([4, 8, 16])), int(rng.choice([4, 8, 16]))
+    gi, go = int(rng.integers(1, 6)), int(rng.integers(1, 6))
+    w, keep = _block_sparse(rng, gi, go, bk, bn, float(rng.uniform(0, 1)))
+    bsr = M.pack_bsr(w, bk, bn)
+    np.testing.assert_array_equal(M.bsr_to_dense(bsr), w)
+    assert bsr.nnz.sum() == keep.sum()
+
+
+@pytest.mark.parametrize("seed", range(6, 10))
+def test_pack_bsr_nnz_max_truncation(seed):
+    """An explicit nnz_max below the true max drops the LAST surviving rows
+    of over-full columns; ``nnz`` keeps the TRUE counts (for stats) while
+    ``bsr_to_dense`` reconstructs only the stored slots."""
+    rng = np.random.default_rng(seed)
+    bk = bn = 8
+    gi, go = int(rng.integers(3, 7)), int(rng.integers(1, 5))
+    w, keep = _block_sparse(rng, gi, go, bk, bn, 0.9)
+    cap = int(rng.integers(1, max(keep.sum(axis=0).max(), 2)))
+    bsr = M.pack_bsr(w, bk, bn, nnz_max=cap)
+    assert bsr.blocks.shape[1] == cap
+    np.testing.assert_array_equal(bsr.nnz, keep.sum(axis=0))  # true counts
+    want = np.zeros_like(w)
+    for j in range(go):
+        for i in np.flatnonzero(keep[:, j])[:cap]:
+            want[i * bk:(i + 1) * bk, j * bn:(j + 1) * bn] = \
+                w[i * bk:(i + 1) * bk, j * bn:(j + 1) * bn]
+    np.testing.assert_array_equal(M.bsr_to_dense(bsr), want)
+
+
+def test_pack_bsr_all_zero_weight():
+    """Everything pruned: one padding slot per column, row_idx 0, and the
+    kernel must still produce exact zeros (padding is masked, not summed)."""
+    w = np.zeros((32, 24), np.float32)
+    bsr = M.pack_bsr(w, 8, 8)
+    assert bsr.nnz.tolist() == [0, 0, 0]
+    assert bsr.blocks.shape[1] == 1  # nnz_max floors at one (inert) slot
+    np.testing.assert_array_equal(M.bsr_to_dense(bsr), w)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((5, 32)),
+                    jnp.float32)
+    y = K.bsr_matmul(x, jnp.asarray(bsr.blocks),
+                     jnp.ones(bsr.row_idx.shape, jnp.float32),
+                     jnp.asarray(bsr.row_idx), jnp.asarray(bsr.nnz),
+                     bm=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros((5, 24)))
+
+
+@pytest.mark.parametrize("seed", range(10, 16))
+def test_bsr_kernel_matches_dense_randomized(seed):
+    """cim_bsr_matmul == x @ bsr_to_dense(packing) across random shapes,
+    tilings and densities - including truncated packings, where BOTH sides
+    see only the stored slots."""
+    rng = np.random.default_rng(seed)
+    bk, bn = int(rng.choice([8, 16])), int(rng.choice([8, 16]))
+    gi, go = int(rng.integers(1, 5)), int(rng.integers(1, 5))
+    m = int(rng.integers(1, 17))
+    w, keep = _block_sparse(rng, gi, go, bk, bn, float(rng.uniform(0, 1)))
+    truncate = bool(rng.integers(2)) and keep.sum(axis=0).max() > 1
+    cap = (int(rng.integers(1, keep.sum(axis=0).max() + 1)) if truncate
+           else None)
+    bsr = M.pack_bsr(w, bk, bn, nnz_max=cap)
+    x = rng.standard_normal((m, gi * bk)).astype(np.float32)
+    y = K.bsr_matmul(jnp.asarray(x), jnp.asarray(bsr.blocks),
+                     jnp.ones(bsr.row_idx.shape, jnp.float32),
+                     jnp.asarray(bsr.row_idx), jnp.asarray(bsr.nnz),
+                     bm=max(8, min(128, m)), interpret=True)
+    want = x @ M.bsr_to_dense(bsr)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(16, 20))
+def test_deployed_matmul_randomized_shapes(seed):
+    """deploy_weight -> deployed_matmul == reference_matmul on random
+    (d_in, d_out), tile and sparsity draws (the end-to-end differential the
+    serving path rides on)."""
+    rng = np.random.default_rng(seed)
+    bk, bn = int(rng.choice([8, 16, 32])), int(rng.choice([8, 16, 32]))
+    d_in = bk * int(rng.integers(1, 5))
+    d_out = bn * int(rng.integers(1, 5))
+    ts = float(rng.choice([0.0, 0.25, 0.5, 0.75]))
+    w_bits = int(rng.choice([4, 8]))
+    cim = _cim(w_bits=w_bits, ts=ts)
+    w = jnp.asarray(rng.standard_normal((d_in, d_out)) * 0.2, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((int(rng.integers(1, 9)), d_in)),
+                    jnp.float32)
+    dw = deploy.deploy_weight(w, cim, bk=bk, bn=bn, target_sparsity=ts)
+    got = deploy.deployed_matmul(x, dw, a_bits=cim.quant.a_bits,
+                                 interpret=True)
+    want = deploy.reference_matmul(x, w, cim, target_sparsity=ts,
+                                   bk=bk, bn=bn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_deploy_stacked_lm_layers():

@@ -69,6 +69,60 @@ def test_pack_bsr_roundtrip(gi, go, density, seed, bk, bn):
     assert abs(bsr.density - keep.mean()) < 1e-9
 
 
+@settings(**SETTINGS)
+@given(
+    gi=st.integers(2, 6), go=st.integers(1, 4),
+    density=st.floats(0.3, 1.0), seed=st.integers(0, 2**16),
+    cap=st.integers(1, 4),
+)
+def test_pack_bsr_truncation_keeps_first_rows(gi, go, density, seed, cap):
+    """With an explicit nnz_max, each column stores its FIRST ``cap``
+    surviving rows; ``nnz`` keeps true counts and ``bsr_to_dense`` only
+    reconstructs the stored slots."""
+    rng = np.random.default_rng(seed)
+    keep = rng.random((gi, go)) < density
+    bk = bn = 8
+    w = rng.standard_normal((gi * bk, go * bn)).astype(np.float32)
+    w *= np.repeat(np.repeat(keep, bk, 0), bn, 1)
+    bsr = M.pack_bsr(w, bk, bn, nnz_max=cap)
+    assert bsr.blocks.shape[1] == cap
+    np.testing.assert_array_equal(bsr.nnz, keep.sum(axis=0))
+    want = np.zeros_like(w)
+    for j in range(go):
+        for i in np.flatnonzero(keep[:, j])[:cap]:
+            want[i * bk:(i + 1) * bk, j * bn:(j + 1) * bn] = \
+                w[i * bk:(i + 1) * bk, j * bn:(j + 1) * bn]
+    np.testing.assert_array_equal(M.bsr_to_dense(bsr), want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    gi=st.integers(1, 4), go=st.integers(1, 4), m=st.integers(1, 9),
+    density=st.floats(0.0, 1.0), seed=st.integers(0, 2**16),
+    bk=st.sampled_from([8, 16]), bn=st.sampled_from([8, 16]),
+    truncate=st.booleans(),
+)
+def test_bsr_kernel_matches_dense(gi, go, m, density, seed, bk, bn, truncate):
+    """The Pallas BSR kernel == x @ bsr_to_dense(packing) for any packing -
+    including nnz_max-truncated ones and all-zero columns (padding slots
+    must be masked from the accumulation, never summed)."""
+    from repro.kernels import cim_bsr_matmul as K
+
+    rng = np.random.default_rng(seed)
+    keep = rng.random((gi, go)) < density
+    w = rng.standard_normal((gi * bk, go * bn)).astype(np.float32)
+    w *= np.repeat(np.repeat(keep, bk, 0), bn, 1)
+    cap = max(1, gi - 1) if truncate else None
+    bsr = M.pack_bsr(w, bk, bn, nnz_max=cap)
+    x = rng.standard_normal((m, gi * bk)).astype(np.float32)
+    y = K.bsr_matmul(jnp.asarray(x), jnp.asarray(bsr.blocks),
+                     jnp.ones(bsr.row_idx.shape, jnp.float32),
+                     jnp.asarray(bsr.row_idx), jnp.asarray(bsr.nnz),
+                     bm=max(8, min(128, m)), interpret=True)
+    np.testing.assert_allclose(np.asarray(y), x @ M.bsr_to_dense(bsr),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # Quantizers (eqs. 5-8)
 # ---------------------------------------------------------------------------

@@ -176,6 +176,62 @@ def test_decode_attention_multi_matches_per_row(dense_model):
 
 
 # ---------------------------------------------------------------------------
+# Report guards: empty traces and zero-duration runs must not divide by zero
+# ---------------------------------------------------------------------------
+
+
+def test_run_with_empty_trace_reports_zeros(dense_model):
+    cfg, params = dense_model
+    srv = BatchServer(cfg, DP.from_params(cfg, params), ServeConfig(),
+                      BatchConfig(n_slots=2, block_size=4, n_blocks=8))
+    rep = srv.run([])
+    assert rep.n_requests == 0 and rep.total_tokens == 0
+    assert rep.tokens_per_s == 0.0
+    assert rep.slot_efficiency == 1.0
+    j = rep.to_json()  # must serialize without NaN/inf
+    assert j["ttft"] == {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    assert j["tpot"] == {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    assert np.isfinite(j["tokens_per_s"])
+
+
+def test_report_zero_duration_run():
+    from repro.serve.server import ServeReport
+
+    rep = ServeReport(n_requests=0, total_tokens=0, wall_s=0.0,
+                      n_decode_steps=0, ttft_s=[], tpot_s=[],
+                      outputs={}, kv_stats={})
+    assert rep.tokens_per_s == 0.0
+    assert rep.slot_efficiency == 1.0
+    # tokens but zero wall clock (a mocked/degenerate timer) stays finite
+    rep2 = ServeReport(n_requests=1, total_tokens=3, wall_s=0.0,
+                       n_decode_steps=2, ttft_s=[0.1], tpot_s=[0.01],
+                       outputs={}, kv_stats={})
+    assert rep2.tokens_per_s == 0.0
+    assert np.isfinite(rep2.slot_efficiency)
+
+
+def test_percentiles_guard_empty_and_nonfinite():
+    from repro.serve.server import _percentiles
+
+    assert _percentiles([]) == {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    assert _percentiles([np.nan, np.inf]) == {"p50": 0.0, "p99": 0.0,
+                                              "mean": 0.0}
+    p = _percentiles([0.5, np.nan, 1.5])  # finite entries still summarized
+    assert p["mean"] == pytest.approx(1.0)
+
+
+def test_slot_efficiency_never_negative():
+    from repro.serve.server import ServeReport
+
+    # pathological accounting (more requests than tokens) clamps at 0
+    rep = ServeReport(n_requests=5, total_tokens=2, wall_s=1.0,
+                      n_decode_steps=3, ttft_s=[], tpot_s=[],
+                      outputs={}, kv_stats={})
+    rep._n_slots = 2
+    assert rep.slot_efficiency == 0.0
+
+
+# ---------------------------------------------------------------------------
 # Compressed serving
 # ---------------------------------------------------------------------------
 
