@@ -10,7 +10,13 @@ ways on the smoke LM:
   * ``continuous`` - the same server, slot-level admission into freed lanes;
   * ``compressed`` - continuous batching where every CIM projection runs on
     the int8 BSR Pallas kernel (``serve.deployed.compress`` with a
-    ``sched.search``-chosen tile);
+    ``sched.search``-chosen tile); this is the LOOP runtime (python loop
+    over per-layer packed weights - L kernel dispatches per decode step);
+  * ``compressed_scan`` - the SAME weights through the compiled runtime
+    (``BatchServer(engine="scan")``: uniform-envelope stacks + one jitted
+    ``lax.scan`` decode step, zero per-layer dispatches). The loop-vs-scan
+    summary row reports decode-step latency, first-run trace/compile time,
+    tokens/s, and the ``tokens_match`` parity bit (bit-exactness contract);
   * ``sharded``    - the compressed server column-sharded over a forced
     4-device host macro mesh (run in a subprocess so the device count can
     be set before jax imports). On CPU fake devices this measures the
@@ -29,6 +35,7 @@ import json
 import os
 import subprocess
 import sys
+import time
 
 import jax
 import numpy as np
@@ -50,17 +57,29 @@ SHARD_DEVICES = 4
 SHARD_TILE = (16, 16)  # small tile -> enough block columns to split
 
 
-def _serve(cfg, sp, continuous: bool, trace_fn, repeats: int = 2):
+def _serve(cfg, sp, continuous: bool, trace_fn, repeats: int = 2,
+           engine: str = "loop"):
+    rep, _ = _serve_timed(cfg, sp, continuous, trace_fn, repeats=repeats,
+                          engine=engine)
+    return rep
+
+
+def _serve_timed(cfg, sp, continuous: bool, trace_fn, repeats: int = 2,
+                 engine: str = "loop"):
+    """Like ``_serve`` but also returns the first-run wall time - dominated
+    by trace+compile, the cost the scan runtime amortizes over layers."""
     srv = BatchServer(cfg, sp, ServeConfig(),
                       BatchConfig(n_slots=4, block_size=8, n_blocks=64),
-                      continuous=continuous)
+                      continuous=continuous, engine=engine)
+    t0 = time.perf_counter()
     srv.run(trace_fn())  # compile all shape buckets
+    compile_s = time.perf_counter() - t0
     best = None
     for _ in range(repeats):
         rep = srv.run(trace_fn())
         if best is None or rep.tokens_per_s > best.tokens_per_s:
             best = rep
-    return best
+    return best, compile_s
 
 
 def _row(name: str, j: dict) -> dict:
@@ -139,12 +158,35 @@ def run():
 
     trace_fn = lambda: synthetic_trace(cfg, N_REQUESTS, MAX_PROMPT, MAX_NEW)
 
+    loop_rep, loop_compile_s = _serve_timed(cfg, spc, True, trace_fn)
+    scan_rep, scan_compile_s = _serve_timed(cfg, spc, True, trace_fn,
+                                            engine="scan")
+    scan_match = all(
+        np.array_equal(scan_rep.outputs[r.rid], loop_rep.outputs[r.rid])
+        for r in trace_fn())
     reports = {
         "static": _serve(cfg, sp, False, trace_fn),
         "continuous": _serve(cfg, sp, True, trace_fn),
-        "compressed": _serve(cfg, spc, True, trace_fn),
+        "compressed": loop_rep,
+        "compressed_scan": scan_rep,
     }
     sharded = _sharded_report()
+    loop_vs_scan = {
+        # per-decode-step latency: all slots advance one token per step,
+        # so tpot is the step cost; the scan runtime compiles the layer
+        # loop into ONE dispatch instead of L kernel launches per step
+        "decode_step_p50_ms_loop": round(
+            loop_rep.to_json()["tpot"]["p50"] * 1e3, 3),
+        "decode_step_p50_ms_scan": round(
+            scan_rep.to_json()["tpot"]["p50"] * 1e3, 3),
+        "compile_s_loop": round(loop_compile_s, 2),
+        "compile_s_scan": round(scan_compile_s, 2),
+        "tokens_per_s_loop": loop_rep.to_json()["tokens_per_s"],
+        "tokens_per_s_scan": scan_rep.to_json()["tokens_per_s"],
+        "layer_dispatches_per_step_loop": cfg.n_layers,
+        "layer_dispatches_per_step_scan": 1,
+        "tokens_match": scan_match,
+    }
 
     report = {
         "arch": cfg.name,
@@ -156,15 +198,20 @@ def run():
             reports["continuous"].tokens_per_s
             / max(reports["static"].tokens_per_s, 1e-9), 3),
         **{k: v.to_json() for k, v in reports.items()},
+        "loop_vs_scan": loop_vs_scan,
         "sharded": sharded,
     }
     with open(os.path.abspath(OUT_PATH), "w") as f:
         json.dump(report, f, indent=1)
 
     rows = [_row(name, rep.to_json()) for name, rep in reports.items()]
+    for r in rows:
+        if r["name"] == "serve_compressed_scan":
+            r["tokens_match"] = scan_match
     srow = _row("sharded_macro%d" % SHARD_DEVICES, sharded)
     srow["tokens_match"] = sharded["tokens_match_single_device"]
     rows.append(srow)
+    rows.append({"name": "serve_loop_vs_scan", **loop_vs_scan})
     rows.append({
         "name": "serve_continuous_speedup",
         "vs_static": report["speedup_continuous_vs_static"],

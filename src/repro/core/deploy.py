@@ -6,11 +6,21 @@ equivalent: every CIM-mapped projection is quantized to int levels
 (eqs. 6-8), pruned at the TPU tile granularity, and packed for the
 ``cim_bsr_matmul`` kernel. ``deployed_matmul`` is the drop-in serving
 replacement for ``cim_matmul``.
+
+Uniform envelope: :func:`stack_deployed` folds L per-layer
+:class:`DeployedWeight` packings of one projection into a single
+:class:`StackedWeight` whose slot axis is padded to the per-projection
+``nnz_max`` maximum (zero blocks AND zero scales, so padding is inert even
+past a truncated layer's guard) while the per-layer ``nnz``/``row_idx``
+stay exact - padding blocks are never computed. ``stacked_matmul`` then
+serves any layer of the stack through ONE compiled layer-indexed kernel,
+which is what lets the serving runtime ``lax.scan`` over layers instead of
+dispatching L separate kernels per decode step.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +78,160 @@ jax.tree_util.register_pytree_node(
     lambda dw: ((dw.packed,), (dw.d_in, dw.d_out, dw.bits, dw.mesh)),
     lambda aux, ch: DeployedWeight(ch[0], *aux),
 )
+
+
+@dataclasses.dataclass
+class StackedWeight:
+    """L layers of one projection in a single uniform packing envelope.
+
+    Every layer shares the (go, bk, bn) geometry; the slot axis is padded to
+    the per-projection ``nnz_max`` maximum with zero blocks and zero scales,
+    and the per-layer ``nnz``/``row_idx`` stay exact, so a padded slot is
+    never a numeric participant. One layer-indexed kernel serves the whole
+    stack - the compiled decode step never dispatches per layer.
+
+    ``col_inv`` is None for single-device stacks. After stacking macro-
+    sharded layers it holds the per-layer un-permute index ((L, go),
+    replicated) that restores logical column order after the sharded
+    kernel's all-gather - each layer keeps its own LPT column placement.
+    """
+
+    blocks: jnp.ndarray   # (L, go, nnz_max, bk, bn) int8
+    scales: jnp.ndarray   # (L, go, nnz_max) f32 (0 in padding slots)
+    row_idx: jnp.ndarray  # (L, go, nnz_max) int32
+    nnz: jnp.ndarray      # (L, go) int32 true per-layer slot counts
+    d_in: int
+    d_out: int
+    bits: int
+    col_inv: Optional[jnp.ndarray] = None  # (L, go) int32 when sharded
+    mesh: Optional[Mesh] = None
+
+    @property
+    def n_layers(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def tile(self) -> tuple:
+        b = self.blocks
+        return (int(b.shape[3]), int(b.shape[4]))
+
+    @property
+    def density(self) -> float:
+        total = (self.d_in // self.tile[0]) * (self.d_out // self.tile[1])
+        return float(np.asarray(self.nnz).sum()) / max(
+            total * self.n_layers, 1)
+
+    def layer(self, i: int) -> DeployedWeight:
+        """Materialize layer ``i`` as a standalone single-layer
+        DeployedWeight (host-side; for tests and storage accounting)."""
+        go = int(self.nnz.shape[1])
+        p = {k: np.asarray(getattr(self, k)[i])
+             for k in ("blocks", "scales", "row_idx", "nnz")}
+        gi = self.d_in // self.tile[0]
+        p["density"] = float(p["nnz"].sum()) / max(gi * go, 1)
+        if self.col_inv is not None:
+            p["col_inv"] = np.asarray(self.col_inv[i])
+        return DeployedWeight([p], self.d_in, self.d_out, self.bits,
+                              mesh=self.mesh)
+
+    def astype(self, dtype):
+        """No-op (call-site compatibility with raw weight arrays)."""
+        return self
+
+
+jax.tree_util.register_pytree_node(
+    StackedWeight,
+    lambda sw: ((sw.blocks, sw.scales, sw.row_idx, sw.nnz, sw.col_inv),
+                (sw.d_in, sw.d_out, sw.bits, sw.mesh)),
+    lambda aux, ch: StackedWeight(*ch[:4], aux[0], aux[1], aux[2],
+                                  col_inv=ch[4], mesh=aux[3]),
+)
+
+
+class StackedLayerView:
+    """One layer of a :class:`StackedWeight`, as seen from inside a traced
+    scan body: ``layer`` is the (traced) scan index. ``cim_matmul``
+    dispatches this to :func:`stacked_matmul`, so the standard model code
+    (attention / MLP bodies) runs over a layer stack unchanged. Never
+    crosses a jit boundary - it is built fresh each scan step."""
+
+    __slots__ = ("sw", "layer")
+
+    def __init__(self, sw: StackedWeight, layer):
+        self.sw = sw
+        self.layer = layer
+
+    def astype(self, dtype):
+        return self
+
+
+def stack_deployed(dws: Sequence[DeployedWeight]) -> StackedWeight:
+    """Stack per-layer packings of ONE projection into a uniform envelope.
+
+    Every entry must share (d_in, d_out, bits, tile, go) - the uniform-tile
+    contract; only ``nnz_max`` may differ, and it is padded up to the
+    per-projection maximum with zero blocks/scales (``nnz`` keeps the exact
+    per-layer counts, so padding is never fetched by the guard). Accepts
+    single-layer weights or multi-layer ones (their packed lists are
+    concatenated in order). Macro-sharded inputs must all carry the same
+    mesh; their per-layer ``col_inv`` indices stack alongside.
+    """
+    if isinstance(dws, DeployedWeight):
+        dws = [dws]
+    dws = list(dws)
+    if not dws:
+        raise ValueError("stack_deployed needs at least one DeployedWeight")
+    ref = dws[0]
+    for dw in dws[1:]:
+        if (dw.d_in, dw.d_out, dw.bits) != (ref.d_in, ref.d_out, ref.bits):
+            raise ValueError(
+                "stack_deployed: mixed projection geometry "
+                f"{(dw.d_in, dw.d_out, dw.bits)} vs "
+                f"{(ref.d_in, ref.d_out, ref.bits)} - stack one projection "
+                "at a time")
+        if dw.mesh is not ref.mesh:
+            raise ValueError("stack_deployed: mixed meshes across layers")
+    packed = [p for dw in dws for p in dw.packed]
+    shapes = {tuple(np.asarray(p["blocks"]).shape[i] for i in (0, 2, 3))
+              for p in packed}
+    if len(shapes) != 1:
+        raise ValueError(
+            f"stack_deployed: non-uniform (go, bk, bn) across layers "
+            f"{sorted(shapes)} - repack with a uniform tile "
+            "(sched.search uniform mode / compress(uniform=True))")
+    sharded = ref.mesh is not None
+    if sharded and not all("col_inv" in p for p in packed):
+        raise ValueError("stack_deployed: sharded stack missing col_inv")
+    nnz_max = max(int(np.asarray(p["row_idx"]).shape[1]) for p in packed)
+
+    def pad(a, width):
+        a = np.asarray(a)
+        if a.shape[1] == width:
+            return a
+        pads = [(0, 0)] * a.ndim
+        pads[1] = (0, width - a.shape[1])
+        return np.pad(a, pads)  # zero blocks, zero scales, row_idx 0
+
+    blocks = np.stack([pad(p["blocks"], nnz_max) for p in packed])
+    scales = np.stack([pad(p["scales"], nnz_max) for p in packed])
+    row_idx = np.stack([pad(p["row_idx"], nnz_max) for p in packed])
+    nnz = np.stack([np.asarray(p["nnz"]) for p in packed])
+    col_inv = (np.stack([np.asarray(p["col_inv"]) for p in packed])
+               if sharded else None)
+    if sharded:
+        specs = deployed_weight_specs()
+        stacked_specs = {
+            k: P(*((None,) + tuple(specs[k])))
+            for k in ("blocks", "scales", "row_idx", "nnz", "col_inv")}
+        put = lambda k, v: jax.device_put(
+            jnp.asarray(v), NamedSharding(ref.mesh, stacked_specs[k]))
+        return StackedWeight(put("blocks", blocks), put("scales", scales),
+                             put("row_idx", row_idx), put("nnz", nnz),
+                             ref.d_in, ref.d_out, ref.bits,
+                             col_inv=put("col_inv", col_inv), mesh=ref.mesh)
+    return StackedWeight(jnp.asarray(blocks), jnp.asarray(scales),
+                         jnp.asarray(row_idx), jnp.asarray(nnz),
+                         ref.d_in, ref.d_out, ref.bits)
 
 
 def fit_tile(d_in: int, d_out: int, bk: int, bn: int) -> tuple:
@@ -160,6 +324,18 @@ def shard_weight(dw: DeployedWeight, mesh: Mesh, axis: str = MACRO_AXIS,
     return DeployedWeight(packed, dw.d_in, dw.d_out, dw.bits, mesh=mesh)
 
 
+def bm_for_rows(rows: int) -> int:
+    """Kernel row-tile for an activation row count: the next power of two in
+    [8, 128]. A fixed bucket ladder instead of the raw row count means a
+    changing active-batch / padded-prompt size maps to O(log) compiled
+    kernels, not one per size - batch-server admission can't trigger a
+    recompile cascade - and every tile is MXU-aligned."""
+    b = 8
+    while b < rows and b < 128:
+        b *= 2
+    return b
+
+
 def deployed_matmul(x: jnp.ndarray, dw: DeployedWeight, layer: int = 0,
                     a_bits: int = 0, interpret: Optional[bool] = None
                     ) -> jnp.ndarray:
@@ -174,7 +350,7 @@ def deployed_matmul(x: jnp.ndarray, dw: DeployedWeight, layer: int = 0,
         x = Q.quantize_activation(x.astype(jnp.float32), a_bits, signed=True)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, dw.d_in)
-    bm = max(8, min(128, x2.shape[0]))
+    bm = bm_for_rows(x2.shape[0])
     if dw.mesh is not None:
         p = dw.packed[layer]
         go, _, _, bn = p["blocks"].shape
@@ -184,6 +360,69 @@ def deployed_matmul(x: jnp.ndarray, dw: DeployedWeight, layer: int = 0,
     else:
         y = ops.bsr_matmul(x2, dw.packed[layer], bm=bm, interpret=interpret)
     return y.reshape(*lead, dw.d_out).astype(x.dtype)
+
+
+def stacked_matmul(x: jnp.ndarray, sw: StackedWeight, layer,
+                   a_bits: int = 0, interpret: Optional[bool] = None
+                   ) -> jnp.ndarray:
+    """Serving-path matmul against layer ``layer`` of a uniform envelope.
+
+    ``layer`` may be a traced int32 (the scan index): the kernel is layer-
+    indexed through the scalar-prefetch channel, so every layer runs the
+    same compiled program. Numerics are bit-identical to
+    ``deployed_matmul(x, dw_layer)`` - envelope padding contributes nothing.
+    """
+    if a_bits:
+        x = Q.quantize_activation(x.astype(jnp.float32), a_bits, signed=True)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, sw.d_in)
+    bm = bm_for_rows(x2.shape[0])
+    if sw.mesh is not None:
+        go, bn = int(sw.nnz.shape[1]), sw.tile[1]
+        y = ops.bsr_matmul_stacked_sharded(
+            x2, sw.blocks, sw.scales, sw.row_idx, sw.nnz, layer, sw.mesh,
+            bm=bm, interpret=interpret)
+        inv = jax.lax.dynamic_index_in_dim(
+            sw.col_inv, jnp.asarray(layer, jnp.int32), axis=0, keepdims=False)
+        y = jnp.take(y.reshape(-1, go, bn), inv, axis=1)
+        y = y.reshape(-1, sw.d_out)
+    else:
+        y = ops.bsr_matmul_stacked(x2, sw.blocks, sw.scales, sw.row_idx,
+                                   sw.nnz, layer, bm=bm, interpret=interpret)
+    return y.reshape(*lead, sw.d_out).astype(x.dtype)
+
+
+def unshard_weight(dw: DeployedWeight) -> DeployedWeight:
+    """Undo ``shard_weight``: restore logical column order (via ``col_inv``)
+    and drop the placement. This is the serialization form - artifacts store
+    placement-free packings and are re-sharded at load onto whatever mesh
+    the serving host has (host-side, like all packing)."""
+    if dw.mesh is None:
+        return dw
+    packed = []
+    for p in dw.packed:
+        inv = np.asarray(p["col_inv"])
+        packed.append({
+            **{k: jnp.asarray(np.asarray(p[k])[inv])
+               for k in ("blocks", "scales", "row_idx", "nnz")},
+            "density": p["density"],
+        })
+    return DeployedWeight(packed, dw.d_in, dw.d_out, dw.bits)
+
+
+def uniform_fit_tile(shapes: Sequence[tuple], bk: int, bn: int) -> tuple:
+    """One (bk, bn) for a whole network: the largest tile at most the
+    requested one that exactly divides EVERY (d_in, d_out) in ``shapes`` -
+    the CIM-Tuner-style network-wide mapping constraint that makes every
+    projection's packing share a hardware-feasible envelope."""
+    if not shapes:
+        return (bk, bn)
+    gk = 0
+    gn = 0
+    for d_in, d_out in shapes:
+        gk = int(np.gcd(gk, int(d_in)))
+        gn = int(np.gcd(gn, int(d_out)))
+    return (_largest_divisor(gk, bk), _largest_divisor(gn, bn))
 
 
 def reference_matmul(x: jnp.ndarray, w, cim: CIMConfig,

@@ -32,6 +32,16 @@ axis is split over a ``macro`` mesh axis (one shard per device, the way one
 MARS layer spans several SRAM macros), each device runs the SAME kernel on
 only its resident columns, and a single tiled all-gather at the projection
 boundary reassembles the (M, N) output - no cross-device weight traffic.
+
+``bsr_matmul_stacked`` is the uniform-envelope form: L layers of one
+projection, all packed to the SAME (go, nnz_max, bk, bn) geometry, stacked
+along a leading layer axis. The layer id rides the scalar-prefetch channel
+(next to row_idx/nnz), so the BlockSpec index maps steer every DMA into the
+selected layer's slice of the stacked arrays - ONE compiled kernel serves
+all L layers, and a ``lax.scan`` over the layer index never re-traces or
+re-dispatches per layer. Envelope padding slots carry zero blocks AND zero
+scales, so even a slot the per-layer ``nnz`` guard does not skip
+contributes exactly 0 - stacking can never change numerics.
 """
 from __future__ import annotations
 
@@ -100,6 +110,97 @@ def bsr_matmul(x: jnp.ndarray, blocks: jnp.ndarray, scales: jnp.ndarray,
         interpret=interpret,
     )(row_idx, nnz, x, blocks, scales.astype(acc_dtype))
     return out[:m]
+
+
+def _kernel_stacked(layer_ref, row_idx_ref, nnz_ref, x_ref, blocks_ref,
+                    scales_ref, out_ref, *, acc_dtype):
+    i, j, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    l = layer_ref[0]
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # the guard uses the SELECTED LAYER's true slot count; slots past it are
+    # envelope padding (zero block, zero scale) and are skipped, and a
+    # truncated layer (nnz > stored slots) accumulates only inert zeros
+    @pl.when(s < nnz_ref[l, j])
+    def _accum():
+        w = blocks_ref[0, 0, 0].astype(acc_dtype) * scales_ref[0, 0, 0]
+        out_ref[...] += jnp.dot(
+            x_ref[...].astype(acc_dtype), w, preferred_element_type=acc_dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "interpret", "acc_dtype")
+)
+def bsr_matmul_stacked(x: jnp.ndarray, blocks: jnp.ndarray,
+                       scales: jnp.ndarray, row_idx: jnp.ndarray,
+                       nnz: jnp.ndarray, layer: jnp.ndarray,
+                       bm: int = DEFAULT_BM, interpret: bool = True,
+                       acc_dtype=jnp.float32) -> jnp.ndarray:
+    """y = x @ W[layer] for a layer-stacked BSR packing.
+
+    blocks: (L, go, nnz_max, bk, bn); scales/row_idx: (L, go, nnz_max);
+    nnz: (L, go); layer: scalar (or (1,)) int32 selecting the layer. The
+    layer id is a traced value - the compiled kernel is layer-agnostic and
+    the grid never grows with L, so a scan over layers is one dispatch per
+    step, not one per (layer, projection).
+    """
+    m, k = x.shape
+    _, go, nnz_max, bk, bn = blocks.shape
+    assert k % bk == 0, (k, bk)
+    assert row_idx.shape == blocks.shape[:3]
+    layer = jnp.asarray(layer, jnp.int32).reshape(1)
+    pad_m = (-m) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    mt = x.shape[0] // bm
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(mt, go, nnz_max),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s, l, ri, nz: (i, ri[l[0], j, s])),
+            pl.BlockSpec((1, 1, 1, bk, bn),
+                         lambda i, j, s, l, ri, nz: (l[0], j, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, s, l, ri, nz: (l[0], j, s)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, l, ri, nz: (i, j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel_stacked, acc_dtype=acc_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], go * bn), acc_dtype),
+        interpret=interpret,
+    )(layer, row_idx, nnz, x, blocks, scales.astype(acc_dtype))
+    return out[:m]
+
+
+def bsr_matmul_stacked_sharded(x: jnp.ndarray, blocks: jnp.ndarray,
+                               scales: jnp.ndarray, row_idx: jnp.ndarray,
+                               nnz: jnp.ndarray, layer: jnp.ndarray, *,
+                               mesh: Mesh, axis: str = MACRO_AXIS,
+                               bm: int = DEFAULT_BM, interpret: bool = True,
+                               acc_dtype=jnp.float32) -> jnp.ndarray:
+    """Tensor-parallel ``bsr_matmul_stacked``: the ``go`` axis (dim 1 of the
+    stacked arrays) is sharded over ``axis``; the layer axis and ``x`` are
+    replicated. Same contract as ``bsr_matmul_sharded``: output columns are
+    in DEVICE order, callers un-permute with their per-layer ``col_inv``."""
+    layer = jnp.asarray(layer, jnp.int32).reshape(1)
+
+    def _local(xl, b, s, ri, nz, l):
+        y = bsr_matmul_stacked(xl, b, s, ri, nz, l, bm=bm,
+                               interpret=interpret, acc_dtype=acc_dtype)
+        return jax.lax.all_gather(y, axis, axis=1, tiled=True)
+
+    f = shard_map(
+        _local, mesh=mesh,
+        in_specs=(P(), P(None, axis, None, None, None), P(None, axis, None),
+                  P(None, axis, None), P(None, axis), P()),
+        out_specs=P(), check_vma=False)
+    return f(x, blocks, scales, row_idx, nnz, layer)
 
 
 def bsr_matmul_sharded(x: jnp.ndarray, blocks: jnp.ndarray,

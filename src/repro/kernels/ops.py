@@ -71,6 +71,32 @@ def bsr_matmul_sharded(x, packed: dict, mesh, bm: int = 128,
     )
 
 
+def bsr_matmul_stacked(x, blocks, scales, row_idx, nnz, layer,
+                       bm: int = 128, interpret: bool | None = None):
+    """Layer-indexed matmul over a uniform-envelope layer stack (see
+    ``core.deploy.stack_deployed``). ``layer`` is a traced int32 scalar -
+    one compiled kernel serves every layer of the stack."""
+    if interpret is None:
+        interpret = default_interpret()
+    return cim_bsr_matmul.bsr_matmul_stacked(
+        x, blocks, scales, row_idx, nnz, layer, bm=bm, interpret=interpret,
+    )
+
+
+def bsr_matmul_stacked_sharded(x, blocks, scales, row_idx, nnz, layer, mesh,
+                               bm: int = 128, interpret: bool | None = None,
+                               axis: str = cim_bsr_matmul.MACRO_AXIS):
+    """Macro-cluster tensor-parallel ``bsr_matmul_stacked``. Output columns
+    are in device order - the caller un-permutes with the stack's per-layer
+    ``col_inv`` row."""
+    if interpret is None:
+        interpret = default_interpret()
+    return cim_bsr_matmul.bsr_matmul_stacked_sharded(
+        x, blocks, scales, row_idx, nnz, layer, mesh=mesh, axis=axis, bm=bm,
+        interpret=interpret,
+    )
+
+
 def quant_matmul(x, w_int8, scale, interpret: bool | None = None, **kw):
     if interpret is None:
         interpret = default_interpret()

@@ -7,6 +7,15 @@
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
       --compressed --target-sparsity 0.5
 
+  # compiled runtime: one jitted lax.scan decode step over the uniform
+  # envelope (bit-identical tokens to the default loop runtime)
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
+      --compressed --runtime scan
+
+  # offline artifact: first run packs + saves, later runs boot from disk
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
+      --compressed --artifact /tmp/yi6b-artifact
+
   # tensor-parallel compressed decode over a 4-device macro cluster
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
@@ -28,7 +37,7 @@ import numpy as np
 
 from ..models import registry
 from ..serve import (BatchConfig, BatchServer, Engine, Request, ServeConfig,
-                     deployed)
+                     deployed, stacked)
 
 
 def _legacy(args, cfg, params, fns=None):
@@ -91,13 +100,43 @@ def _parse_tile(spec):
     return (int(bk), int(bn))
 
 
-def _batch(args, cfg, params):
-    mesh = _parse_mesh(args.mesh)
+def _serving_params(args, cfg, params):
+    """Build (or boot) the ServingParams: the artifact flow runs the full
+    search+quantize+prune+pack pipeline ONCE and later boots skip straight
+    to weights-on-device."""
+    if args.artifact:
+        try:
+            sp, meta = deployed.load_artifact(args.artifact)
+        except FileNotFoundError:
+            sp = None
+        if sp is not None:
+            if meta.get("arch") not in (None, cfg.name):
+                raise SystemExit(
+                    f"--artifact {args.artifact} holds arch "
+                    f"{meta.get('arch')!r}, not {cfg.name!r} - point it at a "
+                    "fresh directory to re-pack")
+            if bool(meta.get("compressed", args.compressed)) != args.compressed:
+                print(f"note: artifact was saved with compressed="
+                      f"{meta.get('compressed')} - serving it as stored "
+                      "(packing flags only apply when building)")
+            print(f"artifact: loaded {args.artifact} "
+                  f"(arch={meta.get('arch')}, no re-packing)")
+            return sp
     sp = (deployed.compress(cfg, params, target_sparsity=args.target_sparsity,
                             schedule=(None if args.tile else
                                       deployed.default_schedule(cfg)),
                             tile=_parse_tile(args.tile))
           if args.compressed else deployed.from_params(cfg, params))
+    if args.artifact:
+        out = deployed.save_artifact(args.artifact, sp, cfg,
+                                     extra={"compressed": args.compressed})
+        print(f"artifact: packed + saved to {out}")
+    return sp
+
+
+def _batch(args, cfg, params):
+    mesh = _parse_mesh(args.mesh)
+    sp = _serving_params(args, cfg, params)
     if args.compressed:
         print("compression:", json.dumps(sp.report()))
     if mesh is not None:
@@ -108,9 +147,14 @@ def _batch(args, cfg, params):
               "column-sharded (rest replicated)")
     bcfg = BatchConfig(n_slots=args.slots, block_size=args.block_size,
                        n_blocks=args.kv_blocks)
+    print(f"runtime: {args.runtime}"
+          + (" (single jitted lax.scan decode step)"
+             if args.runtime == "scan" else
+             " (python loop over per-layer weights)"))
     srv = BatchServer(cfg, sp, ServeConfig(temperature=args.temperature,
                                            seed=args.seed), bcfg,
-                      continuous=(args.engine == "batch"), mesh=mesh)
+                      continuous=(args.engine == "batch"), mesh=mesh,
+                      engine=args.runtime)
     trace = lambda: synthetic_trace(cfg, args.requests, args.prompt_len,
                                     args.new_tokens, seed=args.seed)
     srv.run(trace())  # compile
@@ -130,6 +174,13 @@ def main(argv=None):
                     "same server, whole-batch admission; legacy = Engine")
     ap.add_argument("--compressed", action="store_true",
                     help="serve deploy_weight-packed (BSR) projections")
+    ap.add_argument("--runtime", choices=["loop", "scan"], default="loop",
+                    help="decode runtime: loop = python loop over per-layer "
+                    "weights; scan = one jitted lax.scan over the stacked "
+                    "uniform envelope (bit-identical tokens)")
+    ap.add_argument("--artifact", default="",
+                    help="serving-artifact directory: boot from it when it "
+                    "exists (no re-packing), else pack once and save there")
     ap.add_argument("--mesh", default="",
                     help="macro=N: shard compressed projections column-wise "
                     "and KV heads over an N-device macro cluster")
@@ -162,12 +213,16 @@ def main(argv=None):
 
     if use_legacy:
         if args.compressed:
-            sp = deployed.compress(cfg, params,
-                                   target_sparsity=args.target_sparsity,
-                                   schedule=deployed.default_schedule(cfg))
+            sp = _serving_params(args, cfg, params)
             print("compression:", json.dumps(sp.report()))
-            _legacy(args, cfg, sp, fns=deployed.model_fns(cfg))
+            if args.runtime == "scan":
+                _legacy(args, cfg, stacked.stack(sp),
+                        fns=stacked.model_fns(cfg))
+            else:
+                _legacy(args, cfg, sp, fns=deployed.model_fns(cfg))
         else:
+            # uncompressed legacy serving already runs the registry's
+            # scan-over-layers forward - both --runtime values coincide
             _legacy(args, cfg, params)
     else:
         _batch(args, cfg, params)

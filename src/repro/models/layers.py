@@ -43,10 +43,16 @@ def cim_matmul(x: jnp.ndarray, w, cim: CIMConfig) -> jnp.ndarray:
     ``w`` may also be a :class:`repro.core.deploy.DeployedWeight` - then the
     projection runs on the int8 BSR Pallas kernel (eq.5 activation quant +
     zero-block skip), making the compressed form the compute representation
-    wherever this model code executes (prefill, decode, batch serving).
+    wherever this model code executes (prefill, decode, batch serving) - or
+    a :class:`repro.core.deploy.StackedLayerView` (one layer of a uniform
+    envelope, selected by a traced scan index), which runs the layer-indexed
+    form of the same kernel so a ``lax.scan`` over layers is one compiled
+    dispatch per step.
     """
     if isinstance(w, deploy.DeployedWeight):
         return deploy.deployed_matmul(x, w, a_bits=cim.quant.a_bits)
+    if isinstance(w, deploy.StackedLayerView):
+        return deploy.stacked_matmul(x, w.sw, w.layer, a_bits=cim.quant.a_bits)
     return maybe_quant_a(x, cim) @ maybe_quant_w(w, cim)
 
 

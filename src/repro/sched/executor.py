@@ -56,6 +56,19 @@ class NetworkSchedule:
     cycles: float
     fps: float
 
+    @property
+    def uniform_tile(self) -> tuple:
+        """The single (group, alpha) every layer was scheduled with - the
+        uniform-envelope contract ``stack_deployed`` builds on. Raises if
+        the schedule is heterogeneous (a future per-layer search would
+        need per-layer stacks)."""
+        tiles = {(s.group, s.alpha) for s in self.layers}
+        if len(tiles) > 1:
+            raise ValueError(
+                f"schedule is not uniform-tile: {sorted(tiles)} - re-search "
+                "with search_mapping(uniform=True)")
+        return tiles.pop() if tiles else self.candidate.tile
+
     def to_json(self) -> dict:
         return {
             "group": self.candidate.group,

@@ -68,22 +68,64 @@ def default_candidate(hw: HardwareConfig = DEFAULT_HW,
     return MappingCandidate(hw.group, hw.alpha, pipeline)
 
 
+def tile_divides_graph(graph: LayerGraph, group: int, alpha: int) -> bool:
+    """True when (group, alpha) exactly tiles EVERY node's 2-D workload
+    (kh*kw*cin x cout) - the uniform-envelope feasibility predicate: one
+    tile that ``pack_bsr`` accepts unchanged for the whole network."""
+    return all(
+        (n.layer.kh * n.layer.kw * n.layer.cin) % group == 0
+        and n.layer.cout % alpha == 0
+        for n in graph.nodes.values())
+
+
+def uniform_tile_candidates(graph: LayerGraph,
+                            groups: Sequence[int],
+                            alphas: Sequence[int],
+                            pipeline: bool = True) -> List[MappingCandidate]:
+    """The subset of the (groups x alphas) grid that is network-uniform
+    feasible (divides every layer)."""
+    return [MappingCandidate(g, a, pipeline)
+            for g in groups for a in alphas
+            if tile_divides_graph(graph, g, a)]
+
+
 def search_mapping(graph: LayerGraph, hw: HardwareConfig = DEFAULT_HW,
                    w_bits: int = 8, a_bits: int = 4,
                    groups: Sequence[int] = (8, 16, 32),
                    alphas: Sequence[int] = (8, 16, 32),
                    pipeline: bool = True,
-                   budget: Optional[int] = None) -> SearchResult:
+                   budget: Optional[int] = None,
+                   uniform: bool = False) -> SearchResult:
     """Grid search over tile shapes; ``budget`` caps simulated candidates
-    (the default mapping never counts against it)."""
+    (the default mapping never counts against it).
+
+    ``uniform=True`` is the CIM-Tuner-style network-wide mode: only tiles
+    that exactly divide EVERY layer's (d_in, d_out) are considered, so the
+    winning (group, alpha) is directly the one packing envelope the whole
+    network deploys with (``stack_deployed`` requires it). The default
+    mapping is kept only if itself feasible; with no feasible candidate at
+    all the search fails loudly rather than silently clipping per layer.
+    """
     cands = [default_candidate(hw, pipeline)]
     for g in groups:
         for a in alphas:
             c = MappingCandidate(g, a, pipeline)
             if c not in cands:
                 cands.append(c)
+    has_default = True
+    if uniform:
+        cands = [c for c in cands
+                 if tile_divides_graph(graph, c.group, c.alpha)]
+        if not cands:
+            raise ValueError(
+                "search_mapping(uniform=True): no candidate tile divides "
+                "every layer - widen groups/alphas (powers of two that "
+                "divide the model dims always qualify)")
+        has_default = cands[0] == default_candidate(hw, pipeline)
     if budget is not None:
-        cands = cands[: 1 + max(budget, 0)]
+        # the default mapping (when it survived filtering) rides for free;
+        # always simulate at least one candidate so a reference row exists
+        cands = cands[: max(int(has_default) + max(budget, 0), 1)]
 
     table: List[CandidateResult] = []
     for c in cands:

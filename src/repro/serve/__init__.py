@@ -11,8 +11,15 @@
     MARS multi-macro cluster): projections column-sharded with the
     scheduler's LPT assignment, KV views sharded heads-wise, bit-identical
     tokens to single-device serving.
+  * :mod:`stacked` + ``BatchServer(engine="scan")`` - the compiled runtime:
+    per-layer packings fold into uniform-envelope ``StackedWeight`` stacks
+    and every decode step is ONE jitted ``lax.scan`` (layer-indexed kernel,
+    no per-layer dispatches), bit-identical to the loop runtime.
+  * ``deployed.save_artifact`` / ``load_artifact`` - offline serving
+    artifacts: pack once at compile time, boot without re-packing.
 """
-from . import batching, deployed, server  # noqa: F401
+from . import batching, deployed, server, stacked  # noqa: F401
 from .batching import PagedKVCache, Request, RequestQueue  # noqa: F401
 from .engine import Engine, ServeConfig  # noqa: F401
 from .server import BatchConfig, BatchServer, ServeReport  # noqa: F401
+from .stacked import StackedParams  # noqa: F401

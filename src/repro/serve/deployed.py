@@ -18,11 +18,16 @@ This module provides the bridge:
     The (bk, bn) block shape per projection comes from a ``sched.search``
     schedule, so the tile the simulator chose IS the tile the kernel runs.
   * :func:`model_fns` - prefill / decode_step with the registry signatures
-    (python loop over layers instead of ``lax.scan``, because packed blocks
-    have per-layer shapes), so ``serve.Engine`` serves compressed weights
-    unchanged.
+    (python loop over per-layer packed weights), so ``serve.Engine`` serves
+    compressed weights unchanged. This is the LOOP runtime - the reference
+    the compiled ``serve.stacked`` scan runtime must reproduce bit-exactly.
   * :func:`decode_step_paged` - the per-row-position decode step the
     continuous-batching server drives over a paged KV view.
+  * :func:`save_artifact` / :func:`load_artifact` - the offline serving
+    artifact flow: mapping search + quantize + prune + BSR packing run ONCE
+    at compile time, the packed :class:`ServingParams` lands on disk via
+    ``train.checkpoint``, and a serving host boots from the directory
+    without re-packing (``launch/serve.py --artifact DIR``).
 """
 from __future__ import annotations
 
@@ -38,6 +43,7 @@ from ..models import layers as L
 from ..models.config import ModelConfig
 from ..sched import (NetworkSchedule, lm_graph, schedule_from_search,
                      search_mapping)
+from ..train import checkpoint as ckpt
 
 # projections deployed per transformer block (2-D leaves only: MoE expert
 # stacks are 3-D and stay on the dense/QAT path)
@@ -49,13 +55,20 @@ SUPPORTED_FAMILIES = ("dense", "moe", "vlm")
 @dataclasses.dataclass
 class ServingParams:
     """Per-layer serving weights (pytree). ``layers[i]`` holds one block's
-    params; projection leaves are arrays or DeployedWeight."""
+    params; projection leaves are arrays or DeployedWeight.
+
+    ``head_t`` caches the tied-embeddings output head (``embed.T``),
+    materialized ONCE at build time instead of re-transposing the full
+    (V, D) embedding inside every prefill/decode trace. It is None whenever
+    an explicit ``head`` exists, and is rebuilt (not stored) by the artifact
+    loader."""
 
     embed: Any
     final_ln: Any
     layers: List[dict]
-    head: Any = None  # None => tied embeddings (use embed.T)
+    head: Any = None  # None => tied embeddings (use head_t == embed.T)
     mm_proj: Any = None  # vlm projector (kept in float)
+    head_t: Any = None  # precomputed embed.T for tied embeddings
 
     def deployed(self) -> Dict[str, D.DeployedWeight]:
         """Name -> DeployedWeight for every compressed projection."""
@@ -75,7 +88,8 @@ class ServingParams:
 
 jax.tree_util.register_pytree_node(
     ServingParams,
-    lambda sp: ((sp.embed, sp.final_ln, sp.layers, sp.head, sp.mm_proj), None),
+    lambda sp: ((sp.embed, sp.final_ln, sp.layers, sp.head, sp.mm_proj,
+                 sp.head_t), None),
     lambda aux, ch: ServingParams(*ch),
 )
 
@@ -94,28 +108,48 @@ def from_params(cfg: ModelConfig, params: dict) -> ServingParams:
     _check_family(cfg)
     layers = [jax.tree.map(lambda a: a[i], params["layers"])
               for i in range(cfg.n_layers)]
+    head = params.get("head")
     return ServingParams(
         embed=params["embed"], final_ln=params["final_ln"], layers=layers,
-        head=params.get("head"), mm_proj=params.get("mm_proj"),
+        head=head, mm_proj=params.get("mm_proj"),
+        # tied embeddings: materialize the output head once, not per trace
+        head_t=None if head is not None else jnp.asarray(params["embed"]).T,
     )
 
 
 def default_schedule(cfg: ModelConfig, seq_len: int = 128,
                      groups=(16, 32, 64), alphas=(16, 32, 64),
-                     sparsity_gs: float = 0.6) -> NetworkSchedule:
+                     sparsity_gs: float = 0.6,
+                     uniform: bool = False) -> NetworkSchedule:
     """Mapping search over the model's CIM projection graph: the returned
-    schedule's per-layer (group, alpha) becomes the serving (bk, bn)."""
+    schedule's per-layer (group, alpha) becomes the serving (bk, bn).
+    ``uniform=True`` restricts the search to tiles that exactly divide every
+    projection (the stacked-deployment envelope)."""
     graph = lm_graph(cfg, seq_len=seq_len, sparsity_gs=sparsity_gs)
     result = search_mapping(graph, w_bits=cfg.w_bits, a_bits=cfg.a_bits,
-                            groups=groups, alphas=alphas)
+                            groups=groups, alphas=alphas, uniform=uniform)
     return schedule_from_search(graph, result, w_bits=cfg.w_bits,
                                 a_bits=cfg.a_bits)
+
+
+def _projection_shapes(sp: ServingParams) -> List[Tuple[int, int]]:
+    """(d_in, d_out) of every 2-D projection that compress() would pack."""
+    shapes = []
+    for p in sp.layers:
+        for proj in PROJECTIONS:
+            w = p.get(proj)
+            if w is not None and getattr(w, "ndim", 0) == 2:
+                shapes.append((int(w.shape[-2]), int(w.shape[-1])))
+    if sp.head is not None:
+        shapes.append((int(sp.head.shape[-2]), int(sp.head.shape[-1])))
+    return shapes
 
 
 def compress(cfg: ModelConfig, params: dict,
              target_sparsity: Optional[float] = None,
              schedule: Optional[NetworkSchedule] = None,
-             tile: Optional[Tuple[int, int]] = None) -> ServingParams:
+             tile: Optional[Tuple[int, int]] = None,
+             uniform: bool = False) -> ServingParams:
     """Pack every CIM-mapped 2-D projection for the BSR kernel.
 
     ``schedule`` (from ``sched.search`` over ``lm_graph(cfg)``) supplies the
@@ -124,6 +158,12 @@ def compress(cfg: ModelConfig, params: dict,
     gains stay dense. ``target_sparsity=0`` packs every block (no pruning) -
     the numerically-honest configuration that must reproduce dense-math
     tokens.
+
+    ``uniform=True`` packs the WHOLE network (head included) with one
+    (bk, bn): the schedule's ``uniform_tile`` (or the requested ``tile``)
+    clipped once to the largest shape that divides every projection, instead
+    of per-projection clipping. This is the envelope contract
+    ``serve.stacked`` / ``core.deploy.stack_deployed`` require.
     """
     sp = from_params(cfg, params)
     cim = cfg.cim
@@ -131,6 +171,10 @@ def compress(cfg: ModelConfig, params: dict,
     if schedule is not None:
         tiles = {s.name: (s.group, s.alpha) for s in schedule.layers}
     fallback = tile if tile is not None else (cfg.cim_alpha, cfg.cim_alpha)
+    if uniform:
+        g, a = schedule.uniform_tile if schedule is not None else fallback
+        net_tile = D.uniform_fit_tile(_projection_shapes(sp), g, a)
+        tiles, fallback = {}, net_tile
 
     def pack(name: str, w) -> D.DeployedWeight:
         d_in, d_out = int(w.shape[-2]), int(w.shape[-1])
@@ -172,12 +216,60 @@ def shard(sp: ServingParams, mesh) -> ServingParams:
         embed=sp.embed, final_ln=sp.final_ln,
         layers=[{k: maybe(v) for k, v in p.items()} for p in sp.layers],
         head=maybe(sp.head) if sp.head is not None else None,
-        mm_proj=sp.mm_proj,
+        mm_proj=sp.mm_proj, head_t=sp.head_t,
     )
 
 
 # ---------------------------------------------------------------------------
-# Forward paths (python loop over layers - packed shapes differ per layer)
+# Offline serving artifacts: pack once, boot many times
+# ---------------------------------------------------------------------------
+
+
+def save_artifact(path: str, sp: ServingParams, cfg: ModelConfig,
+                  extra: Optional[dict] = None) -> str:
+    """Persist a (compressed or dense) ServingParams as a boot-ready
+    serving artifact.
+
+    Placement is stripped before serialization (macro-sharded projections
+    are restored to logical column order via ``core.deploy.unshard_weight``;
+    the mesh never enters the serialized aux), and the derived tied-head
+    cache is dropped - the loader rebuilds both, so one artifact serves any
+    mesh shape. Written atomically through ``train.checkpoint``.
+    """
+
+    def strip(v):
+        if isinstance(v, D.DeployedWeight):
+            return D.unshard_weight(v)
+        return v
+
+    clean = ServingParams(
+        embed=sp.embed, final_ln=sp.final_ln,
+        layers=[{k: strip(v) for k, v in p.items()} for p in sp.layers],
+        head=strip(sp.head) if sp.head is not None else None,
+        mm_proj=sp.mm_proj, head_t=None,
+    )
+    meta = {"arch": cfg.name, "family": cfg.family,
+            "n_layers": cfg.n_layers, **(extra or {})}
+    return ckpt.save_pytree(path, clean, extra=meta)
+
+
+def load_artifact(path: str) -> Tuple[ServingParams, dict]:
+    """Boot a ServingParams from :func:`save_artifact` output WITHOUT
+    re-running search/quantize/prune/pack. Returns (sp, manifest-extra).
+    The tied-head cache is recomputed; re-shard with :func:`shard` if a
+    macro mesh is wanted."""
+    sp, manifest = ckpt.load_pytree(path)
+    if not isinstance(sp, ServingParams):
+        raise TypeError(f"{path}: artifact does not contain ServingParams")
+    if sp.head is None and sp.head_t is None:
+        sp.head_t = jnp.asarray(sp.embed).T
+    return sp, manifest.get("extra", manifest)
+
+
+# ---------------------------------------------------------------------------
+# Forward paths: the LOOP runtime (python loop over per-layer weights).
+# ``serve.stacked`` is the compiled lax.scan form over the uniform envelope;
+# it must reproduce these functions' tokens bit-exactly.
 # ---------------------------------------------------------------------------
 
 
@@ -199,7 +291,11 @@ def _embed_inputs(sp: ServingParams, batch: dict, cfg: ModelConfig):
 
 
 def _head(sp: ServingParams):
-    return sp.head if sp.head is not None else sp.embed.T
+    """Output head: explicit, or the build-time transposed tied embedding
+    (never re-materialized per call)."""
+    if sp.head is not None:
+        return sp.head
+    return sp.head_t if sp.head_t is not None else sp.embed.T
 
 
 def prefill_hidden(sp: ServingParams, batch: dict, cfg: ModelConfig):

@@ -31,7 +31,7 @@ from jax.sharding import Mesh
 
 from ..kernels.cim_bsr_matmul import MACRO_AXIS
 from ..models.config import ModelConfig
-from . import deployed
+from . import deployed, stacked
 from .batching import PagedKVCache, Request, RequestQueue, Slot, kv_view_spec
 from .engine import ServeConfig, sample_tokens
 
@@ -116,19 +116,29 @@ class BatchServer:
     def __init__(self, cfg: ModelConfig, sp: deployed.ServingParams,
                  scfg: Optional[ServeConfig] = None,
                  bcfg: Optional[BatchConfig] = None,
-                 continuous: bool = True, mesh: Optional[Mesh] = None):
+                 continuous: bool = True, mesh: Optional[Mesh] = None,
+                 engine: str = "loop"):
         """``mesh`` (with a ``macro`` axis) turns on macro-cluster serving:
         pass ``deployed.shard(sp, mesh)`` as ``sp`` so projections run
         tensor-parallel, the gathered KV views are sharded heads-wise, and
         the block pool scales to ``bcfg.n_blocks`` per device. The loop
-        itself is unchanged - 1 and N devices run the same code."""
+        itself is unchanged - 1 and N devices run the same code.
+
+        ``engine`` picks the decode runtime over the SAME weights:
+        ``"loop"`` (python loop over per-layer packed weights) or ``"scan"``
+        (``serve.stacked``: one jitted lax.scan per step over the uniform
+        envelope, views donated). Both produce bit-identical greedy tokens;
+        scan is the compiled hot path."""
         if cfg.family == "vlm":
             raise NotImplementedError(
                 "BatchServer serves token-only requests; vlm prefill needs "
                 "per-request patch embeddings (use serve.Engine)")
         deployed._check_family(cfg)
+        if engine not in ("loop", "scan"):
+            raise ValueError(f"engine must be 'loop' or 'scan', got {engine!r}")
         self.cfg = cfg
         self.sp = sp
+        self.engine = engine
         self.scfg = scfg if scfg is not None else ServeConfig()
         self.bcfg = bcfg if bcfg is not None else BatchConfig()
         self.continuous = continuous
@@ -140,9 +150,24 @@ class BatchServer:
         self._kv_scale = (self.n_devices
                           if mesh is not None
                           and kv_view_spec(cfg, mesh) is not None else 1)
-        self._prefill = jax.jit(deployed.prefill_last, static_argnames=("cfg",))
-        self._decode = jax.jit(deployed.decode_step_paged,
-                               static_argnames=("cfg",))
+        if engine == "scan":
+            self._params = stacked.stack(sp)
+            self._prefill = jax.jit(stacked.prefill_last,
+                                    static_argnames=("cfg",))
+            # the gathered views are throwaways: donate them so the scan's
+            # in-view dynamic_update_slice KV writes reuse the buffers
+            # (CPU XLA can't alias freshly-transferred host arrays and only
+            # warns, so donation is gated to real accelerator backends)
+            donate = (1, 2) if jax.default_backend() != "cpu" else ()
+            self._decode = jax.jit(stacked.decode_step_paged,
+                                   static_argnames=("cfg",),
+                                   donate_argnums=donate)
+        else:
+            self._params = sp
+            self._prefill = jax.jit(deployed.prefill_last,
+                                    static_argnames=("cfg",))
+            self._decode = jax.jit(deployed.decode_step_paged,
+                                   static_argnames=("cfg",))
 
     def _sample_row(self, logits: jnp.ndarray, key) -> np.ndarray:
         return np.asarray(sample_tokens(logits, key, self.scfg), np.int32)
@@ -187,7 +212,7 @@ class BatchServer:
         tlen = len(req.prompt)
         pad = (-tlen) % bs
         toks = np.pad(req.prompt, (0, pad))[None]  # (1, S_pad)
-        logits, k, v = self._prefill(self.sp, jnp.asarray(toks),
+        logits, k, v = self._prefill(self._params, jnp.asarray(toks),
                                      jnp.asarray(tlen, jnp.int32),
                                      cfg=self.cfg)
         kv.write_prefill(i, k[:, 0], v[:, 0], tlen)
@@ -247,7 +272,7 @@ class BatchServer:
             toks = np.array([[s.next_token if s else 0] for s in slots],
                             np.int32)
             logits, k_new, v_new = self._decode(
-                self.sp, views_k, views_v, jnp.asarray(pos),
+                self._params, views_k, views_v, jnp.asarray(pos),
                 jnp.asarray(toks), cfg=cfg)
             pb, off = kv.write_coords(
                 [s.pos if s else None for s in slots])

@@ -10,13 +10,25 @@ Fault-tolerance story (1000+-node posture, documented in README):
     device_put with the target shardings - pods can come back smaller or
     larger (ZeRO/TP layout changes are re-derived, not stored).
   * latest-k retention GC.
+
+Two restore paths:
+  * ``save``/``restore`` - template-driven (training state: the caller owns
+    the structure).
+  * ``save_pytree``/``load_pytree`` - template-FREE: the tree structure is
+    serialized as a JSON spec next to the arrays, so serving artifacts
+    (``serve.deployed.save_artifact``) boot with no model code run first.
+    Leaf dtypes round-trip exactly (int8 kernel blocks stay int8 - npz is
+    the at-rest format, no float detour), and the deployment dataclasses
+    (``DeployedWeight`` / ``StackedWeight`` / ``ServingParams``) serialize
+    their static geometry into the spec - EXCEPT the mesh, which is a
+    placement decision of the loading host, never of the artifact.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
-from typing import Any, Optional
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -64,6 +76,142 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     if not ckpts:
         return None
     return int(ckpts[-1].split("_")[1])
+
+
+# ---------------------------------------------------------------------------
+# Template-free pytrees: JSON structure spec + ordered array payload
+# ---------------------------------------------------------------------------
+
+
+def _deploy_mod():
+    from ..core import deploy as D  # local: keep train importable standalone
+    return D
+
+
+def _serving_cls():
+    from ..serve.deployed import ServingParams
+    return ServingParams
+
+
+def tree_spec(tree: Any, leaves: List[np.ndarray]) -> Any:
+    """Recursively describe ``tree`` as JSON, appending array leaves (host
+    numpy, dtype preserved - int8 stays int8) to ``leaves`` in order."""
+    D = _deploy_mod()
+    if tree is None:
+        return {"t": "none"}
+    if isinstance(tree, D.DeployedWeight):
+        if tree.mesh is not None:
+            raise ValueError(
+                "serialize placement-free packings: unshard_weight() first "
+                "(mesh is excluded from artifact aux by design)")
+        return {"t": "deployed", "d_in": tree.d_in, "d_out": tree.d_out,
+                "bits": tree.bits,
+                "packed": [tree_spec(p, leaves) for p in tree.packed]}
+    if isinstance(tree, D.StackedWeight):
+        if tree.mesh is not None:
+            raise ValueError(
+                "serialize placement-free stacks (mesh excluded from "
+                "artifact aux); restack on the serving host's mesh")
+        return {"t": "stacked", "d_in": tree.d_in, "d_out": tree.d_out,
+                "bits": tree.bits,
+                "arrays": [tree_spec(getattr(tree, k), leaves)
+                           for k in ("blocks", "scales", "row_idx", "nnz",
+                                     "col_inv")]}
+    if isinstance(tree, _serving_cls()):
+        return {"t": "serving_params",
+                "fields": [tree_spec(getattr(tree, k), leaves)
+                           for k in ("embed", "final_ln", "layers", "head",
+                                     "mm_proj", "head_t")]}
+    if isinstance(tree, dict):
+        return {"t": "dict", "items": [[str(k), tree_spec(v, leaves)]
+                                       for k, v in tree.items()]}
+    if isinstance(tree, (list, tuple)):
+        return {"t": "list" if isinstance(tree, list) else "tuple",
+                "items": [tree_spec(v, leaves) for v in tree]}
+    if isinstance(tree, (bool, int, float, str)):
+        return {"t": "py", "v": tree}
+    arr = np.asarray(jax.device_get(tree))
+    leaves.append(arr)
+    return {"t": "arr", "i": len(leaves) - 1, "dtype": str(arr.dtype),
+            "shape": list(arr.shape)}
+
+
+def tree_from_spec(spec: Any, leaves: List[np.ndarray],
+                   device: bool = True) -> Any:
+    """Inverse of :func:`tree_spec`."""
+    D = _deploy_mod()
+    t = spec["t"]
+    if t == "none":
+        return None
+    if t == "arr":
+        arr = np.asarray(leaves[spec["i"]])
+        if str(arr.dtype) != spec["dtype"]:
+            arr = arr.astype(spec["dtype"])
+        return jax.numpy.asarray(arr) if device else arr
+    if t == "py":
+        return spec["v"]
+    if t == "dict":
+        return {k: tree_from_spec(v, leaves, device)
+                for k, v in spec["items"]}
+    if t in ("list", "tuple"):
+        out = [tree_from_spec(v, leaves, device) for v in spec["items"]]
+        return out if t == "list" else tuple(out)
+    if t == "deployed":
+        return D.DeployedWeight(
+            [tree_from_spec(p, leaves, device) for p in spec["packed"]],
+            spec["d_in"], spec["d_out"], spec["bits"])
+    if t == "stacked":
+        blocks, scales, row_idx, nnz, col_inv = (
+            tree_from_spec(a, leaves, device) for a in spec["arrays"])
+        return D.StackedWeight(blocks, scales, row_idx, nnz, spec["d_in"],
+                               spec["d_out"], spec["bits"], col_inv=col_inv)
+    if t == "serving_params":
+        return _serving_cls()(*(tree_from_spec(f, leaves, device)
+                                for f in spec["fields"]))
+    raise ValueError(f"unknown tree-spec node type {t!r}")
+
+
+def save_pytree(ckpt_dir: str, tree: Any, extra: Optional[dict] = None,
+                step: int = 0) -> str:
+    """Atomic template-free save: structure into the manifest, array leaves
+    (dtype-exact) into the npz."""
+    leaves: List[np.ndarray] = []
+    spec = tree_spec(tree, leaves)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp-{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"leaf_{i:06d}": a for i, a in enumerate(leaves)})
+    manifest = {"step": int(step), "extra": extra or {}, "spec": spec,
+                "n_arrays": len(leaves)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def load_pytree(ckpt_dir: str, step: Optional[int] = None
+                ) -> Tuple[Any, dict]:
+    """Load a :func:`save_pytree` directory with no template. Returns
+    (tree, manifest)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    if "spec" not in manifest:
+        raise ValueError(
+            f"{d} was written by save() (template-driven) - use restore()")
+    loaded = np.load(os.path.join(d, "arrays.npz"))
+    leaves = [loaded[f"leaf_{i:06d}"] for i in range(manifest["n_arrays"])]
+    return tree_from_spec(manifest["spec"], leaves), manifest
 
 
 def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,

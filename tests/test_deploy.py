@@ -167,3 +167,56 @@ def test_deploy_stacked_lm_layers():
     # fp32 dense -> 8-bit weights at ~50% block sparsity: > 4x compression
     assert rep["compression_x"] > 4.0, rep
     assert rep["weight_Mb"] < rep["dense_Mb"]
+
+
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_stack_deployed_matches_per_layer_seeded(seed):
+    """Seeded envelope-parity sweep: mixed per-layer sparsities (including
+    an all-zero layer) stacked into one uniform envelope must reproduce the
+    per-layer kernel bit-for-bit through the layer-indexed entry point."""
+    cim = _cim(w_bits=8, ts=0.5)
+    rng = np.random.default_rng(seed)
+    dws = []
+    for ts in (0.0, float(rng.uniform(0.2, 0.8)), 1.0):
+        w = rng.standard_normal((64, 96)).astype(np.float32) * 0.3
+        if ts >= 1.0:
+            w = np.zeros_like(w)
+            ts = 0.5
+        dws.append(deploy.deploy_weight(w, cim, bk=16, bn=16,
+                                        target_sparsity=ts))
+    sw = deploy.stack_deployed(dws)
+    assert sw.n_layers == 3 and sw.tile == (16, 16)
+    x = jnp.asarray(rng.standard_normal((6, 64)), jnp.float32)
+    for i, dw in enumerate(dws):
+        np.testing.assert_array_equal(
+            np.asarray(deploy.stacked_matmul(x, sw, i, a_bits=8,
+                                             interpret=True)),
+            np.asarray(deploy.deployed_matmul(x, dw, a_bits=8,
+                                              interpret=True)),
+            err_msg=f"seed={seed} layer={i}")
+
+
+def test_stack_deployed_accepts_multilayer_weight():
+    """A deploy_weight over a stacked (L, d, d) master weight already holds
+    L packed dicts - stack_deployed folds them into the same envelope as L
+    separate single-layer weights."""
+    cfg = registry.get_smoke_config("yi-6b", dtype="float32")
+    params = registry.model_fns(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    cim = _cim(w_bits=8, ts=0.5)
+    dw = deploy.deploy_weight(params["layers"]["w_up"], cim, bk=16, bn=16)
+    sw = deploy.stack_deployed(dw)
+    assert sw.n_layers == cfg.n_layers
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, cfg.d_model))
+    for layer in range(cfg.n_layers):
+        np.testing.assert_array_equal(
+            np.asarray(deploy.stacked_matmul(x, sw, layer, interpret=True)),
+            np.asarray(deploy.deployed_matmul(x, dw, layer=layer,
+                                              interpret=True)))
+
+
+def test_uniform_fit_tile():
+    shapes = [(64, 64), (64, 32), (128, 64), (64, 256)]
+    assert deploy.uniform_fit_tile(shapes, 16, 16) == (16, 16)
+    assert deploy.uniform_fit_tile(shapes, 48, 48) == (32, 32)
+    assert deploy.uniform_fit_tile([(60, 90)], 16, 16) == (15, 15)
+    assert deploy.uniform_fit_tile([], 16, 16) == (16, 16)
