@@ -21,13 +21,24 @@ ways on the smoke LM:
     4-device host macro mesh (run in a subprocess so the device count can
     be set before jax imports). On CPU fake devices this measures the
     orchestration overhead, not a speedup - the row's purpose is the
-    contract: tokens bit-identical to single-device (``tokens_match``).
+    contract: tokens bit-identical to single-device (``tokens_match``);
+  * ``spec``       - self-speculative decode: a higher-sparsity draft
+    packing of the SAME weights proposes k tokens per batched multi-token
+    target verify. Reports the measured acceptance rate, decode-step p50
+    and tokens/s against ``compressed_scan``, plus the
+    ``tokens_match_target`` greedy bit-exactness bit.
 
 The single-host engines share kernels and per-step cost, so static-vs-
 continuous isolates the scheduling policy. Each engine is warmed on the
 identical trace first (shape buckets compile once); the reported run is
 jit-warm. Results land in ``BENCH_serve.json`` with TTFT / per-token-latency
 percentiles.
+
+Packings are cached as serving artifacts under one shared directory
+(``MARS_BENCH_ARTIFACTS``, default ``/tmp/mars-bench-artifacts``): the
+subprocess rows boot via ``serve.deployed.load_artifact`` instead of
+re-packing from scratch, and repeat benchmark runs (or CI smokes pointed at
+the same directory) skip the search+quantize+prune+pack pipeline entirely.
 """
 from __future__ import annotations
 
@@ -41,12 +52,15 @@ import jax
 import numpy as np
 
 from repro.models import registry
-from repro.serve import BatchConfig, BatchServer, Request, ServeConfig
+from repro.serve import (BatchConfig, BatchServer, Request, ServeConfig,
+                         SpecConfig)
 from repro.serve import deployed as DP
+from repro.serve import spec as SP
 from repro.launch.serve import synthetic_trace
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART_ROOT = os.environ.get("MARS_BENCH_ARTIFACTS", "/tmp/mars-bench-artifacts")
 
 ARCH = "yi-6b"
 N_REQUESTS = 12
@@ -55,22 +69,24 @@ MAX_NEW = 36
 TARGET_SPARSITY = 0.6
 SHARD_DEVICES = 4
 SHARD_TILE = (16, 16)  # small tile -> enough block columns to split
+SPEC_K = 4
+SPEC_DRAFT_SPARSITY = 0.85
 
 
 def _serve(cfg, sp, continuous: bool, trace_fn, repeats: int = 2,
-           engine: str = "loop"):
+           engine: str = "loop", **kw):
     rep, _ = _serve_timed(cfg, sp, continuous, trace_fn, repeats=repeats,
-                          engine=engine)
+                          engine=engine, **kw)
     return rep
 
 
 def _serve_timed(cfg, sp, continuous: bool, trace_fn, repeats: int = 2,
-                 engine: str = "loop"):
+                 engine: str = "loop", **kw):
     """Like ``_serve`` but also returns the first-run wall time - dominated
     by trace+compile, the cost the scan runtime amortizes over layers."""
     srv = BatchServer(cfg, sp, ServeConfig(),
                       BatchConfig(n_slots=4, block_size=8, n_blocks=64),
-                      continuous=continuous, engine=engine)
+                      continuous=continuous, engine=engine, **kw)
     t0 = time.perf_counter()
     srv.run(trace_fn())  # compile all shape buckets
     compile_s = time.perf_counter() - t0
@@ -80,6 +96,32 @@ def _serve_timed(cfg, sp, continuous: bool, trace_fn, repeats: int = 2,
         if best is None or rep.tokens_per_s > best.tokens_per_s:
             best = rep
     return best, compile_s
+
+
+def _cached_packing(name: str, cfg, build_fn, draft: bool = False,
+                    want: dict | None = None):
+    """Load a packed ServingParams from the shared artifact dir, or build
+    it ONCE with ``build_fn() -> (sp, draft_sp_or_None, extra)`` and save
+    it there - subprocess rows and repeat runs boot without re-packing.
+
+    ``want`` pins the packing constants the caller is about to report
+    (sparsities, forced tile; the arch is always pinned): a cached
+    artifact whose stored meta disagrees is STALE (the constants changed
+    since it was packed) and is rebuilt rather than silently served under
+    the new labels."""
+    want = {"arch": cfg.name, **(want or {})}
+    path = os.path.join(ART_ROOT, name)
+    try:
+        sp, dsp, meta = DP.load_artifact_tiers(path)
+        if (all(meta.get(k) == v for k, v in want.items())
+                and (dsp is not None or not draft)):
+            return sp, dsp, meta
+    except (FileNotFoundError, ValueError, TypeError):
+        pass
+    sp, dsp, extra = build_fn()
+    extra = {**want, **extra}
+    DP.save_artifact(path, sp, cfg, draft=dsp, extra=extra)
+    return sp, dsp, extra
 
 
 def _row(name: str, j: dict) -> dict:
@@ -94,16 +136,32 @@ def _row(name: str, j: dict) -> dict:
     }
 
 
+def _shard_packing(cfg):
+    """The 16x16-tile packing the sharded row serves, cached as a shared
+    artifact so the subprocess boots it instead of re-packing."""
+
+    def build():
+        params = registry.model_fns(cfg).init_params(cfg,
+                                                     jax.random.PRNGKey(0))
+        sp = DP.compress(cfg, params, target_sparsity=TARGET_SPARSITY,
+                         tile=SHARD_TILE)
+        return sp, None, {}
+
+    return _cached_packing("sharded%dx%d" % SHARD_TILE, cfg, build,
+                           want={"tile": list(SHARD_TILE),
+                                 "target_sparsity": TARGET_SPARSITY})[0]
+
+
 def sharded_worker():
     """Runs inside a subprocess with SHARD_DEVICES forced host devices:
     serves the benchmark trace single-device and macro-sharded, checks
-    bit-identical tokens, prints the sharded report JSON on the last line."""
+    bit-identical tokens, prints the sharded report JSON on the last line.
+    Boots the packing from the shared artifact dir (the parent process
+    already built and saved it - no re-packing here)."""
     from repro.launch.shardings import macro_mesh
 
     cfg = registry.get_smoke_config(ARCH, dtype="float32")
-    params = registry.model_fns(cfg).init_params(cfg, jax.random.PRNGKey(0))
-    spc = DP.compress(cfg, params, target_sparsity=TARGET_SPARSITY,
-                      tile=SHARD_TILE)
+    spc = _shard_packing(cfg)
     trace_fn = lambda: synthetic_trace(cfg, N_REQUESTS, MAX_PROMPT, MAX_NEW)
     single = _serve(cfg, spc, True, trace_fn, repeats=1)
 
@@ -152,9 +210,23 @@ def run():
     cfg = registry.get_smoke_config(ARCH, dtype="float32")
     params = registry.model_fns(cfg).init_params(cfg, jax.random.PRNGKey(0))
     sp = DP.from_params(cfg, params)
-    schedule = DP.default_schedule(cfg)
-    spc = DP.compress(cfg, params, target_sparsity=TARGET_SPARSITY,
-                      schedule=schedule)
+
+    def build_compressed():
+        schedule = DP.default_schedule(cfg)
+        spc = DP.compress(cfg, params, target_sparsity=TARGET_SPARSITY,
+                          schedule=schedule)
+        draft = SP.draft_serving(cfg, spc, SPEC_DRAFT_SPARSITY)
+        return spc, draft, {"tile": list(schedule.candidate.tile)}
+
+    # the searched-tile packing + its speculative draft tier ride one
+    # shared two-tier artifact: repeat runs (and anything else pointed at
+    # ART_ROOT) boot without re-running search/quantize/prune/pack
+    spc, draft, meta = _cached_packing(
+        "compressed", cfg, build_compressed, draft=True,
+        want={"target_sparsity": TARGET_SPARSITY,
+              "draft_sparsity": SPEC_DRAFT_SPARSITY})
+    schedule_tile = list(meta.get("tile", []))
+    _shard_packing(cfg)  # warm the artifact the sharded subprocess boots
 
     trace_fn = lambda: synthetic_trace(cfg, N_REQUESTS, MAX_PROMPT, MAX_NEW)
 
@@ -164,11 +236,18 @@ def run():
     scan_match = all(
         np.array_equal(scan_rep.outputs[r.rid], loop_rep.outputs[r.rid])
         for r in trace_fn())
+    spec_rep = _serve(cfg, spc, True, trace_fn, engine="spec", draft=draft,
+                      spec=SpecConfig(k=SPEC_K,
+                                      draft_sparsity=SPEC_DRAFT_SPARSITY))
+    spec_match = all(
+        np.array_equal(spec_rep.outputs[r.rid], scan_rep.outputs[r.rid])
+        for r in trace_fn())
     reports = {
         "static": _serve(cfg, sp, False, trace_fn),
         "continuous": _serve(cfg, sp, True, trace_fn),
         "compressed": loop_rep,
         "compressed_scan": scan_rep,
+        "spec": spec_rep,
     }
     sharded = _sharded_report()
     loop_vs_scan = {
@@ -188,17 +267,41 @@ def run():
         "tokens_match": scan_match,
     }
 
+    scan_j = scan_rep.to_json()
+    spec_j = spec_rep.to_json()
+    spec_summary = {
+        # draft-k-verify vs the compiled target-only baseline: same
+        # weights, same trace - what speculation buys (or costs) end to end
+        "k": SPEC_K,
+        "draft_sparsity": SPEC_DRAFT_SPARSITY,
+        "draft_compression_x": round(
+            draft.report()["compression_x"], 2),
+        "acceptance_rate": spec_j["spec"]["acceptance_rate"],
+        "tokens_per_verify": spec_j["spec"]["tokens_per_verify"],
+        # spec tokens materialize in bursts (one round = draft loop +
+        # verify), so its per-token latency is the round p50 divided by
+        # tokens/round - NOT the pooled token_times diffs, whose
+        # intra-burst entries are legitimately zero
+        "round_p50_ms_spec": spec_j["spec"]["round_p50_ms"],
+        "decode_p50_ms_spec": spec_j["spec"]["ms_per_token_p50"],
+        "decode_p50_ms_scan": round(scan_j["tpot"]["p50"] * 1e3, 3),
+        "tokens_per_s_spec": spec_j["tokens_per_s"],
+        "tokens_per_s_scan": scan_j["tokens_per_s"],
+        "tokens_match_target": spec_match,
+    }
+
     report = {
         "arch": cfg.name,
         "trace": {"n_requests": N_REQUESTS, "max_prompt": MAX_PROMPT,
                   "max_new": MAX_NEW},
-        "schedule_tile": list(schedule.candidate.tile),
+        "schedule_tile": schedule_tile,
         "compression": spc.report(),
         "speedup_continuous_vs_static": round(
             reports["continuous"].tokens_per_s
             / max(reports["static"].tokens_per_s, 1e-9), 3),
         **{k: v.to_json() for k, v in reports.items()},
         "loop_vs_scan": loop_vs_scan,
+        "spec_vs_scan": spec_summary,
         "sharded": sharded,
     }
     with open(os.path.abspath(OUT_PATH), "w") as f:
@@ -208,10 +311,14 @@ def run():
     for r in rows:
         if r["name"] == "serve_compressed_scan":
             r["tokens_match"] = scan_match
+        if r["name"] == "serve_spec":
+            r["acceptance_rate"] = spec_summary["acceptance_rate"]
+            r["tokens_match_target"] = spec_match
     srow = _row("sharded_macro%d" % SHARD_DEVICES, sharded)
     srow["tokens_match"] = sharded["tokens_match_single_device"]
     rows.append(srow)
     rows.append({"name": "serve_loop_vs_scan", **loop_vs_scan})
+    rows.append({"name": "serve_spec_vs_scan", **spec_summary})
     rows.append({
         "name": "serve_continuous_speedup",
         "vs_static": report["speedup_continuous_vs_static"],

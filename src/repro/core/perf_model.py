@@ -228,6 +228,45 @@ def summarize(layers: Sequence[ConvLayer], w_bits: int = 8, a_bits: int = 4,
 
 
 # ---------------------------------------------------------------------------
+# Speculative decoding: two-tier (draft + target) cost model
+# ---------------------------------------------------------------------------
+
+
+def expected_spec_tokens(k: int, accept: float) -> float:
+    """Expected tokens emitted per draft-k-verify round.
+
+    Under per-token-independent acceptance probability ``accept``, the
+    round emits the longest accepted draft prefix plus the target's
+    correction token: E = sum_{t=0..k} accept^t = (1-a^{k+1})/(1-a)."""
+    a = min(max(accept, 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def speculative_summary(c_draft_step: float, c_verify: float, k: int,
+                        accept: float) -> dict:
+    """Throughput model for one speculative round on the CIM fabric.
+
+    ``c_draft_step`` is the simulated cycle cost of ONE draft-tier decode
+    step (its reload + compute at the draft sparsity); ``c_verify`` the
+    cost of one (k+1)-token target pass. The draft loop runs k+1 steps
+    (k proposals + the trailing KV-fill step that keeps the draft cache in
+    lockstep). ``accept`` is the modeled per-token acceptance probability -
+    a calibration input, NOT simulated; the serve benchmark reports the
+    measured rate to calibrate against."""
+    tokens = expected_spec_tokens(k, accept)
+    cycles = (k + 1) * c_draft_step + c_verify
+    return {
+        "k": k,
+        "accept": round(min(max(accept, 0.0), 1.0), 4),
+        "tokens_per_round": round(tokens, 4),
+        "cycles_per_round": round(cycles, 1),
+        "tokens_per_kcycle": round(1e3 * tokens / max(cycles, 1e-9), 5),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Paper networks on CIFAR (32x32): layer tables for Table I / Figs. 10-11
 # ---------------------------------------------------------------------------
 

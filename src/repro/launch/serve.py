@@ -21,6 +21,13 @@
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
       --compressed --mesh macro=4 --tile 16x16
 
+  # self-speculative decode: a 0.9-sparsity draft packing of the SAME
+  # weights proposes 4 tokens per target verify (greedy tokens stay
+  # bit-identical to target-only decode; --spec auto picks k and the
+  # draft sparsity from the simulated reload+compute cost)
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
+      --compressed --spec k=4,draft_sparsity=0.9
+
   # legacy static-batch Engine (any registry family)
   PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b --smoke \\
       --engine legacy --batch 4 --prompt-len 16 --new-tokens 32
@@ -37,7 +44,8 @@ import numpy as np
 
 from ..models import registry
 from ..serve import (BatchConfig, BatchServer, Engine, Request, ServeConfig,
-                     deployed, stacked)
+                     SpecConfig, deployed, stacked)
+from ..serve import spec as spec_mod
 
 
 def _legacy(args, cfg, params, fns=None):
@@ -100,13 +108,64 @@ def _parse_tile(spec):
     return (int(bk), int(bn))
 
 
-def _serving_params(args, cfg, params):
-    """Build (or boot) the ServingParams: the artifact flow runs the full
-    search+quantize+prune+pack pipeline ONCE and later boots skip straight
-    to weights-on-device."""
+def _parse_spec(arg, cfg, target_sparsity):
+    """'k=4,draft_sparsity=0.9' -> SpecConfig; 'auto' picks both from the
+    simulated draft-tier reload+compute cost (sched.search.search_spec);
+    '' -> None (no speculation)."""
+    if not arg:
+        return None
+    if arg == "auto":
+        from ..sched import search_spec
+        res = search_spec(cfg, target_sparsity=target_sparsity)
+        print("spec auto-pick:", json.dumps(res.best))
+        print(f"spec auto-pick: acceptance {res.best['accept']} is a "
+              "MODELED prior (sched.search.default_accept_model), not a "
+              "measurement - compare against the served acceptance_rate "
+              "in the report/BENCH_serve.json and pass a fitted "
+              "accept_model to search_spec for calibrated picks")
+        if res.best["speedup_vs_target"] <= 1.0:
+            print("spec auto-pick: best candidate models "
+                  f"{res.best['speedup_vs_target']}x vs target-only decode "
+                  "- speculation would not pay; serving WITHOUT it")
+            return None
+        return SpecConfig(k=int(res.best["k"]),
+                          draft_sparsity=float(res.best["draft_sparsity"]))
+    usage = (f"--spec expects k=INT,draft_sparsity=FLOAT or 'auto', "
+             f"got {arg!r}")
+    kw = {}
+    for part in arg.split(","):
+        key, _, val = part.partition("=")
+        key = key.strip()
+        try:
+            if key == "k":
+                kw["k"] = int(val)
+            elif key == "draft_sparsity":
+                kw["draft_sparsity"] = float(val)
+            else:
+                raise SystemExit(usage)
+        except ValueError:
+            raise SystemExit(usage) from None
+    try:
+        return SpecConfig(**kw)
+    except ValueError as e:
+        raise SystemExit(f"--spec: {e}") from None
+
+
+def _serving_params(args, cfg, params, spec_cfg=None):
+    """Build (or boot) the serving weights: the artifact flow runs the
+    full search+quantize+prune+pack pipeline ONCE and later boots skip
+    straight to weights-on-device. Returns (target, draft-or-None,
+    spec_cfg); with ``spec_cfg`` the draft tier rides the same artifact
+    (two-tier) - an existing single-tier artifact is upgraded in place
+    (draft re-packed from the STORED target packing, then re-saved with
+    its original manifest extra merged, not rebuilt from current flags).
+    A stored draft tier is served AS STORED: if its packed sparsity
+    differs from the requested one, the returned spec_cfg adopts the
+    stored value so telemetry reports the packing actually served."""
+    sp = draft = None
     if args.artifact:
         try:
-            sp, meta = deployed.load_artifact(args.artifact)
+            sp, draft, meta = deployed.load_artifact_tiers(args.artifact)
         except FileNotFoundError:
             sp = None
         if sp is not None:
@@ -121,45 +180,93 @@ def _serving_params(args, cfg, params):
                       "(packing flags only apply when building)")
             print(f"artifact: loaded {args.artifact} "
                   f"(arch={meta.get('arch')}, no re-packing)")
-            return sp
+            if spec_cfg is None:
+                return sp, None, None
+            if draft is not None:
+                stored_ds = meta.get("draft_sparsity")
+                if (stored_ds is not None
+                        and stored_ds != spec_cfg.draft_sparsity):
+                    print(f"note: artifact's draft tier was packed at "
+                          f"sparsity {stored_ds}, not the requested "
+                          f"{spec_cfg.draft_sparsity} - serving it as "
+                          "stored (point --artifact at a fresh directory "
+                          "to re-pack)")
+                    spec_cfg = SpecConfig(k=spec_cfg.k,
+                                          draft_sparsity=float(stored_ds))
+                return sp, draft, spec_cfg
+            draft = spec_mod.draft_serving(
+                cfg, sp, spec_cfg.draft_sparsity,
+                tile=_parse_tile(args.tile))
+            out = deployed.save_artifact(
+                args.artifact, sp, cfg, draft=draft,
+                extra={**meta,
+                       "draft_sparsity": spec_cfg.draft_sparsity})
+            print(f"artifact: upgraded to two-tier (draft packed at "
+                  f"sparsity {spec_cfg.draft_sparsity}) at {out}")
+            return sp, draft, spec_cfg
     sp = (deployed.compress(cfg, params, target_sparsity=args.target_sparsity,
                             schedule=(None if args.tile else
                                       deployed.default_schedule(cfg)),
                             tile=_parse_tile(args.tile))
           if args.compressed else deployed.from_params(cfg, params))
+    if spec_cfg is not None:
+        draft = spec_mod.draft_serving(cfg, sp, spec_cfg.draft_sparsity,
+                                       tile=_parse_tile(args.tile))
     if args.artifact:
-        out = deployed.save_artifact(args.artifact, sp, cfg,
-                                     extra={"compressed": args.compressed})
+        extra = {"compressed": args.compressed}
+        if draft is not None:
+            extra["draft_sparsity"] = spec_cfg.draft_sparsity
+        out = deployed.save_artifact(args.artifact, sp, cfg, draft=draft,
+                                     extra=extra)
         print(f"artifact: packed + saved to {out}")
-    return sp
+    return sp, draft, spec_cfg
 
 
 def _batch(args, cfg, params):
     mesh = _parse_mesh(args.mesh)
-    sp = _serving_params(args, cfg, params)
+    spec_cfg = _parse_spec(args.spec, cfg, args.target_sparsity)
+    sp, draft, spec_cfg = _serving_params(args, cfg, params, spec_cfg)
     if args.compressed:
         print("compression:", json.dumps(sp.report()))
+    if spec_cfg is not None:
+        print(f"spec: draft tier packed at sparsity "
+              f"{spec_cfg.draft_sparsity} "
+              f"({json.dumps(draft.report())}), k={spec_cfg.k}")
     if mesh is not None:
         sp = deployed.shard(sp, mesh)
+        if draft is not None:
+            draft = deployed.shard(draft, mesh)
         n_sharded = sum(1 for dw in sp.deployed().values()
                         if dw.mesh is not None)
         print(f"macro mesh: {mesh.shape} - {n_sharded} projections "
               "column-sharded (rest replicated)")
     bcfg = BatchConfig(n_slots=args.slots, block_size=args.block_size,
                        n_blocks=args.kv_blocks)
-    print(f"runtime: {args.runtime}"
-          + (" (single jitted lax.scan decode step)"
-             if args.runtime == "scan" else
-             " (python loop over per-layer weights)"))
+    engine = "spec" if spec_cfg is not None else args.runtime
+    print(f"runtime: {engine}"
+          + {"scan": " (single jitted lax.scan decode step)",
+             "loop": " (python loop over per-layer weights)",
+             "spec": " (draft-k-verify speculative decode, greedy-exact)"
+             }[engine])
     srv = BatchServer(cfg, sp, ServeConfig(temperature=args.temperature,
                                            seed=args.seed), bcfg,
                       continuous=(args.engine == "batch"), mesh=mesh,
-                      engine=args.runtime)
+                      engine=engine, draft=draft, spec=spec_cfg)
     trace = lambda: synthetic_trace(cfg, args.requests, args.prompt_len,
                                     args.new_tokens, seed=args.seed)
     srv.run(trace())  # compile
     rep = srv.run(trace())
-    print(json.dumps(rep.to_json(), indent=1))
+    out = rep.to_json()
+    if spec_cfg is not None and args.parity_check:
+        # greedy-exactness audit: target-only scan decode over the same
+        # trace must emit bit-identical tokens
+        ref = BatchServer(cfg, sp, ServeConfig(seed=args.seed), bcfg,
+                          continuous=(args.engine == "batch"), mesh=mesh,
+                          engine="scan").run(trace())
+        out["tokens_match_target"] = bool(all(
+            np.array_equal(rep.outputs[r.rid], ref.outputs[r.rid])
+            for r in trace()))
+    print(json.dumps(out, indent=1))
     for rid in list(rep.outputs)[:3]:
         print(f"  {rid}:", rep.outputs[rid].tolist())
 
@@ -178,6 +285,16 @@ def main(argv=None):
                     help="decode runtime: loop = python loop over per-layer "
                     "weights; scan = one jitted lax.scan over the stacked "
                     "uniform envelope (bit-identical tokens)")
+    ap.add_argument("--spec", default="",
+                    help="speculative decode: k=INT,draft_sparsity=FLOAT "
+                    "(e.g. k=4,draft_sparsity=0.9) packs a second, "
+                    "higher-sparsity draft tier of the same weights and "
+                    "serves engine='spec'; 'auto' picks both from the "
+                    "simulated draft-tier cost")
+    ap.add_argument("--parity-check", action="store_true",
+                    help="with --spec: also run target-only scan decode "
+                    "over the trace and report tokens_match_target (the "
+                    "greedy bit-exactness contract)")
     ap.add_argument("--artifact", default="",
                     help="serving-artifact directory: boot from it when it "
                     "exists (no re-packing), else pack once and save there")
@@ -213,7 +330,7 @@ def main(argv=None):
 
     if use_legacy:
         if args.compressed:
-            sp = _serving_params(args, cfg, params)
+            sp, _, _ = _serving_params(args, cfg, params)
             print("compression:", json.dumps(sp.report()))
             if args.runtime == "scan":
                 _legacy(args, cfg, stacked.stack(sp),

@@ -278,39 +278,44 @@ def decode_attention(p: dict, x1: jnp.ndarray, kcache: jnp.ndarray,
     return y, kcache, vcache
 
 
-def decode_attention_multi(p: dict, x1: jnp.ndarray, kview: jnp.ndarray,
+def decode_attention_multi(p: dict, xt: jnp.ndarray, kview: jnp.ndarray,
                            vview: jnp.ndarray, pos: jnp.ndarray, cfg,
                            window: int = 0, use_rope: bool = True):
-    """One-token decode with PER-ROW positions over a gathered KV view.
+    """Multi-token decode with PER-ROW positions over a gathered KV view.
 
     The continuous-batching engine serves slots at different depths in one
-    step: row b is at absolute position ``pos[b]``. ``kview``/``vview``
-    (B, Sv, KV, dh) are the paged KV blocks gathered contiguously for this
-    step (logical positions 0..Sv-1); positions beyond a row's ``pos`` hold
-    stale or scratch data and are masked out, so the view length only has
-    to cover the deepest active row. Returns (y, k_new, v_new) where
-    k_new/v_new (B, KV, dh) are this token's cache entries for the pool
-    write-back - the view itself is a throwaway gather."""
-    b = x1.shape[0]
-    q, k, v = qkv_project(p, x1, cfg, cfg.cim)
+    step: row b's ``T`` query tokens sit at absolute positions
+    ``pos[b] .. pos[b]+T-1`` (T=1 is the ordinary decode step; T>1 is the
+    speculative verify pass, a prefill-style causal pass over the draft
+    run). ``kview``/``vview`` (B, Sv, KV, dh) are the paged KV blocks
+    gathered contiguously for this step (logical positions 0..Sv-1); the
+    query tokens' own K/V are written into the view before attending, and
+    positions beyond each query's own position hold stale or scratch data
+    masked out causally, so the view length only has to cover the deepest
+    active row. Returns (y, k_new, v_new) where k_new/v_new (B, T, KV, dh)
+    are the query tokens' cache entries for the pool write-back - the view
+    itself is a throwaway gather (the caller commits only the entries it
+    accepts, which is how speculative rejection rolls back)."""
+    b, t, _ = xt.shape
+    q, k, v = qkv_project(p, xt, cfg, cfg.cim)
+    pp = pos[:, None] + jnp.arange(t)[None, :]  # (B, T) absolute positions
     if use_rope:
-        pp = pos[:, None]  # (B, 1)
         q, k = rope(q, pp, cfg.rope_theta), rope(k, pp, cfg.rope_theta)
-    rows = jnp.arange(b)
-    kview = kview.at[rows, pos].set(k[:, 0].astype(kview.dtype))
-    vview = vview.at[rows, pos].set(v[:, 0].astype(vview.dtype))
+    rows = jnp.arange(b)[:, None]
+    kview = kview.at[rows, pp].set(k.astype(kview.dtype))
+    vview = vview.at[rows, pp].set(v.astype(vview.dtype))
     kj = jnp.arange(kview.shape[1])[None, None, None, :]
-    pe = pos[:, None, None, None]
+    pe = pp[:, None, :, None]  # (B, 1, T, 1) per-query positions
     mask = kj <= pe
     w = jnp.asarray(window)
     mask = mask & ((w <= 0) | (kj > pe - w))
     nh = getattr(cfg, "n_heads_eff", cfg.n_heads)
     o = attention_scores(
-        q, _expand_kv(kview.astype(x1.dtype), nh, cfg.n_heads),
-        _expand_kv(vview.astype(x1.dtype), nh, cfg.n_heads), mask
+        q, _expand_kv(kview.astype(xt.dtype), nh, cfg.n_heads),
+        _expand_kv(vview.astype(xt.dtype), nh, cfg.n_heads), mask
     )
-    y = cim_matmul(o.reshape(b, 1, -1), p["wo"].astype(x1.dtype), cfg.cim)
-    return y, k[:, 0], v[:, 0]
+    y = cim_matmul(o.reshape(b, t, -1), p["wo"].astype(xt.dtype), cfg.cim)
+    return y, k, v
 
 
 # ---------------------------------------------------------------------------

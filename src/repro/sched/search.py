@@ -13,11 +13,12 @@ than the default.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
-from ..core.perf_model import DEFAULT_HW, HardwareConfig
+from ..core.perf_model import (DEFAULT_HW, HardwareConfig,
+                               speculative_summary)
 
-from .graph import LayerGraph
+from .graph import LayerGraph, lm_graph
 from .simulate import SimResult, simulate
 
 
@@ -136,6 +137,77 @@ def search_mapping(graph: LayerGraph, hw: HardwareConfig = DEFAULT_HW,
     default = table[0]
     best = max(table, key=lambda r: r.fps)
     return SearchResult(best, default, table)
+
+
+# ---------------------------------------------------------------------------
+# Speculative two-tier search: pick (draft_sparsity, k) from simulated cost
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SpecSearchResult:
+    """Winner + full table of the (draft_sparsity, k) grid. Each row is a
+    ``perf_model.speculative_summary`` dict extended with the simulated
+    per-step draft cost."""
+
+    best: dict
+    table: List[dict]
+
+
+def default_accept_model(draft_sparsity: float,
+                         target_sparsity: float) -> float:
+    """Crude acceptance prior: agreement decays linearly with the extra
+    sparsity the draft tier gives up over the target. This is a
+    CALIBRATION KNOB, not physics - pass a measured model (e.g. fitted to
+    ``BENCH_serve.json``'s spec row) for real deployments."""
+    return min(1.0, max(0.0, 1.0 - (draft_sparsity - target_sparsity)))
+
+
+def search_spec(cfg, *, hw: HardwareConfig = DEFAULT_HW, w_bits: int = 8,
+                a_bits: int = 8, target_sparsity: float = 0.6,
+                draft_sparsities: Sequence[float] = (0.75, 0.85, 0.9, 0.95),
+                ks: Sequence[int] = (2, 3, 4, 6, 8),
+                group: int = 16, alpha: int = 16,
+                accept_model: Optional[Callable[[float, float], float]] = None
+                ) -> SpecSearchResult:
+    """Pick the speculative (draft_sparsity, k) from SIMULATED cost.
+
+    For every candidate draft sparsity the event-driven simulator prices a
+    one-token draft decode step (its reload + compute over the projection
+    graph at that sparsity); for every k it prices the (k+1)-token target
+    verify pass. ``perf_model.speculative_summary`` combines them with the
+    acceptance prior into expected tokens/cycle; the best row wins. The
+    target tier's own one-token cost is simulated too, so the winner's
+    ``speedup_vs_target`` says whether speculation pays at all under the
+    modeled acceptance.
+    """
+    accept_model = accept_model or default_accept_model
+    c_target_step = simulate(lm_graph(cfg, seq_len=1,
+                                      sparsity_gs=target_sparsity),
+                             hw, w_bits, a_bits, group=group,
+                             alpha=alpha).cycles
+    verify_cost = {k: simulate(lm_graph(cfg, seq_len=k + 1,
+                                        sparsity_gs=target_sparsity),
+                               hw, w_bits, a_bits, group=group,
+                               alpha=alpha).cycles
+                   for k in ks}
+    table: List[dict] = []
+    for ds in draft_sparsities:
+        c_draft = simulate(lm_graph(cfg, seq_len=1, sparsity_gs=ds),
+                           hw, w_bits, a_bits, group=group,
+                           alpha=alpha).cycles
+        accept = accept_model(ds, target_sparsity)
+        for k in ks:
+            row = speculative_summary(c_draft, verify_cost[k], k, accept)
+            row["draft_sparsity"] = ds
+            row["draft_step_cycles"] = round(c_draft, 1)
+            # tokens/cycle speculative vs the target's 1 token / step
+            row["speedup_vs_target"] = round(
+                row["tokens_per_round"] * c_target_step
+                / max(row["cycles_per_round"], 1e-9), 4)
+            table.append(row)
+    best = max(table, key=lambda r: r["tokens_per_kcycle"])
+    return SpecSearchResult(best, table)
 
 
 def greedy_search(graph: LayerGraph, hw: HardwareConfig = DEFAULT_HW,

@@ -15,11 +15,19 @@
     per-layer packings fold into uniform-envelope ``StackedWeight`` stacks
     and every decode step is ONE jitted ``lax.scan`` (layer-indexed kernel,
     no per-layer dispatches), bit-identical to the loop runtime.
+  * :mod:`spec` + ``BatchServer(engine="spec")`` - self-speculative
+    decoding over two-tier compression: a higher-sparsity draft packing of
+    the SAME weights proposes k tokens, one batched multi-token target
+    verify accepts the longest greedy-matching prefix plus a correction
+    token - greedy tokens stay bit-identical to target-only decode while
+    multiple tokens commit per target pass.
   * ``deployed.save_artifact`` / ``load_artifact`` - offline serving
-    artifacts: pack once at compile time, boot without re-packing.
+    artifacts: pack once at compile time, boot without re-packing
+    (two-tier artifacts carry the draft packing alongside the target).
 """
-from . import batching, deployed, server, stacked  # noqa: F401
+from . import batching, deployed, server, spec, stacked  # noqa: F401
 from .batching import PagedKVCache, Request, RequestQueue  # noqa: F401
 from .engine import Engine, ServeConfig  # noqa: F401
 from .server import BatchConfig, BatchServer, ServeReport  # noqa: F401
+from .spec import SpecConfig, SpecParams  # noqa: F401
 from .stacked import StackedParams  # noqa: F401

@@ -120,20 +120,30 @@ class Slot:
 class PagedKVCache:
     """Block-pooled KV storage for the dense/moe/vlm attention cache.
 
-    pool_k / pool_v: (n_blocks, L, block_size, KV, dh). Per-slot block
-    tables map logical block i -> physical block id. ``gather`` produces the
-    contiguous (L, B, Sv, KV, dh) view a decode step attends over - sized by
-    the deepest ACTIVE slot, not by the engine's max length.
+    pool_k / pool_v: (tiers, n_blocks, L, block_size, KV, dh). Per-slot
+    block tables map logical block i -> physical block id. ``gather``
+    produces the contiguous (L, B, Sv, KV, dh) view a decode step attends
+    over - sized by the deepest ACTIVE slot, not by the engine's max length.
+
+    ``tiers`` > 1 keeps SEVERAL KV pools behind ONE block layout: every
+    tier shares the block tables, free list and accounting, so positions
+    line up exactly across tiers. This is how speculative serving keeps a
+    draft-tier cache next to the target-tier cache without duplicating any
+    allocation state (tier 0 = target, tier 1 = draft).
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, n_blocks: int,
-                 block_size: int, dtype=None, mesh: Optional[Mesh] = None):
+                 block_size: int, dtype=None, mesh: Optional[Mesh] = None,
+                 tiers: int = 1):
         if n_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is scratch)")
+        if tiers < 1:
+            raise ValueError("need >= 1 KV tier")
         self.cfg = cfg
         self.n_slots = n_slots
         self.n_blocks = n_blocks
         self.block_size = block_size
+        self.tiers = tiers
         # macro-cluster serving: gathered views are sharded heads-wise over
         # the mesh when KV heads divide it, so each device attends only its
         # resident heads (and holds only 1/N of every block)
@@ -141,7 +151,8 @@ class PagedKVCache:
         spec = None if mesh is None else kv_view_spec(cfg, mesh)
         self._view_sharding = (None if spec is None
                                else NamedSharding(mesh, spec))
-        shape = (n_blocks, cfg.n_layers, block_size, cfg.n_kv_heads_eff, cfg.dh)
+        shape = (tiers, n_blocks, cfg.n_layers, block_size,
+                 cfg.n_kv_heads_eff, cfg.dh)
         # host numpy, written IN PLACE: a functional .at[].set would copy
         # the whole pool per token, re-creating the max-len-copy cost the
         # paged layout exists to avoid
@@ -174,6 +185,7 @@ class PagedKVCache:
         return {
             "n_blocks": self.n_blocks,
             "block_size": self.block_size,
+            "kv_tiers": self.tiers,
             "allocations": self.n_alloc,
             "reused_blocks": self.n_reused,
             "peak_blocks": self.peak_blocks,
@@ -208,7 +220,7 @@ class PagedKVCache:
     # -- data movement ------------------------------------------------------
 
     def write_prefill(self, slot: int, k: jnp.ndarray, v: jnp.ndarray,
-                      true_len: int) -> None:
+                      true_len: int, tier: int = 0) -> None:
         """Scatter a prefill cache (L, S_pad, KV, dh) into ``slot``'s blocks.
         Only ceil(true_len / block_size) blocks are allocated; pad positions
         inside the last block carry garbage that decode overwrites before
@@ -217,8 +229,8 @@ class PagedKVCache:
         self.ensure(slot, true_len)
         k, v = np.asarray(k), np.asarray(v)
         for i, pb in enumerate(self.tables[slot]):
-            self.pool_k[pb] = k[:, i * bs:(i + 1) * bs]
-            self.pool_v[pb] = v[:, i * bs:(i + 1) * bs]
+            self.pool_k[tier, pb] = k[:, i * bs:(i + 1) * bs]
+            self.pool_v[tier, pb] = v[:, i * bs:(i + 1) * bs]
 
     def view_tables(self, n_view: int) -> np.ndarray:
         """(n_slots, n_view) physical ids; short/idle slots pad with the
@@ -229,14 +241,15 @@ class PagedKVCache:
             tbl[s, :n] = t[:n]
         return tbl
 
-    def gather(self, n_view: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def gather(self, n_view: int, tier: int = 0
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(L, B, n_view*block_size, KV, dh) contiguous K/V views."""
         tbl = self.view_tables(n_view)
         L = self.cfg.n_layers
         bs, kvh, dh = self.block_size, self.cfg.n_kv_heads_eff, self.cfg.dh
 
         def _g(pool):
-            g = pool[tbl]  # (B, n_view, L, bs, KV, dh)
+            g = pool[tier][tbl]  # (B, n_view, L, bs, KV, dh)
             g = g.transpose(2, 0, 1, 3, 4, 5)
             out = jnp.asarray(g.reshape(L, self.n_slots, n_view * bs, kvh, dh))
             if self._view_sharding is not None:
@@ -259,10 +272,29 @@ class PagedKVCache:
         return pb, off
 
     def write_token(self, pb: np.ndarray, off: np.ndarray,
-                    k_new: jnp.ndarray, v_new: jnp.ndarray) -> None:
+                    k_new: jnp.ndarray, v_new: jnp.ndarray,
+                    tier: int = 0) -> None:
         """Write one decode step's K/V (L, B, KV, dh) into the pool (in
         place - only the touched (block, offset) rows move)."""
         kt = np.asarray(k_new).transpose(1, 0, 2, 3)  # (B, L, KV, dh)
         vt = np.asarray(v_new).transpose(1, 0, 2, 3)
-        self.pool_k[pb, :, off] = kt
-        self.pool_v[pb, :, off] = vt
+        self.pool_k[tier][pb, :, off] = kt
+        self.pool_v[tier][pb, :, off] = vt
+
+    def write_run(self, slot: int, start: int, k_run: np.ndarray,
+                  v_run: np.ndarray, tier: int = 0) -> None:
+        """Commit a variable-length run of K/V entries (L, T, KV, dh) for
+        ONE slot at positions ``start .. start+T-1``.
+
+        This is the speculative accept path: the verify/draft passes
+        compute k+1 candidate entries but only the accepted prefix is ever
+        passed here - rejected draft KV is rolled back by simply never
+        reaching the pool (the gathered views the rejects were written
+        into are throwaways)."""
+        t, bs = self.tables[slot], self.block_size
+        k_run, v_run = np.asarray(k_run), np.asarray(v_run)
+        for i in range(k_run.shape[1]):
+            pb = t[(start + i) // bs]
+            off = (start + i) % bs
+            self.pool_k[tier][pb, :, off] = k_run[:, i]
+            self.pool_v[tier][pb, :, off] = v_run[:, i]

@@ -133,15 +133,27 @@ def default_schedule(cfg: ModelConfig, seq_len: int = 128,
 
 
 def _projection_shapes(sp: ServingParams) -> List[Tuple[int, int]]:
-    """(d_in, d_out) of every 2-D projection that compress() would pack."""
+    """(d_in, d_out) of every 2-D projection that compress() would pack
+    (or already has - re-packing flows like the speculative draft tier
+    walk compressed ServingParams too)."""
+
+    def dims(w) -> Optional[Tuple[int, int]]:
+        if isinstance(w, D.DeployedWeight):
+            return (w.d_in, w.d_out)
+        if getattr(w, "ndim", 0) == 2:
+            return (int(w.shape[-2]), int(w.shape[-1]))
+        return None
+
     shapes = []
     for p in sp.layers:
         for proj in PROJECTIONS:
-            w = p.get(proj)
-            if w is not None and getattr(w, "ndim", 0) == 2:
-                shapes.append((int(w.shape[-2]), int(w.shape[-1])))
+            d = dims(p.get(proj))
+            if d is not None:
+                shapes.append(d)
     if sp.head is not None:
-        shapes.append((int(sp.head.shape[-2]), int(sp.head.shape[-1])))
+        d = dims(sp.head)
+        if d is not None:
+            shapes.append(d)
     return shapes
 
 
@@ -225,8 +237,26 @@ def shard(sp: ServingParams, mesh) -> ServingParams:
 # ---------------------------------------------------------------------------
 
 
+def _strip_placement(sp: ServingParams) -> ServingParams:
+    """Serialization form: logical column order, no mesh, no derived
+    tied-head cache."""
+
+    def strip(v):
+        if isinstance(v, D.DeployedWeight):
+            return D.unshard_weight(v)
+        return v
+
+    return ServingParams(
+        embed=sp.embed, final_ln=sp.final_ln,
+        layers=[{k: strip(v) for k, v in p.items()} for p in sp.layers],
+        head=strip(sp.head) if sp.head is not None else None,
+        mm_proj=sp.mm_proj, head_t=None,
+    )
+
+
 def save_artifact(path: str, sp: ServingParams, cfg: ModelConfig,
-                  extra: Optional[dict] = None) -> str:
+                  extra: Optional[dict] = None,
+                  draft: Optional[ServingParams] = None) -> str:
     """Persist a (compressed or dense) ServingParams as a boot-ready
     serving artifact.
 
@@ -235,35 +265,74 @@ def save_artifact(path: str, sp: ServingParams, cfg: ModelConfig,
     the mesh never enters the serialized aux), and the derived tied-head
     cache is dropped - the loader rebuilds both, so one artifact serves any
     mesh shape. Written atomically through ``train.checkpoint``.
+
+    ``draft`` makes the artifact two-tier (speculative serving): the
+    higher-sparsity draft packing is stored alongside the target. Dense
+    leaves the tiers share BY REFERENCE (embed, norms - how
+    ``spec.draft_serving`` builds them) are stored ONCE; the checkpoint
+    spec dedupes identical leaf objects.
     """
-
-    def strip(v):
-        if isinstance(v, D.DeployedWeight):
-            return D.unshard_weight(v)
-        return v
-
-    clean = ServingParams(
-        embed=sp.embed, final_ln=sp.final_ln,
-        layers=[{k: strip(v) for k, v in p.items()} for p in sp.layers],
-        head=strip(sp.head) if sp.head is not None else None,
-        mm_proj=sp.mm_proj, head_t=None,
-    )
     meta = {"arch": cfg.name, "family": cfg.family,
             "n_layers": cfg.n_layers, **(extra or {})}
-    return ckpt.save_pytree(path, clean, extra=meta)
+    clean = _strip_placement(sp)
+    if draft is None:
+        return ckpt.save_pytree(path, clean, extra=meta)
+    meta["two_tier"] = True
+    tree = {"target": clean, "draft": _strip_placement(draft)}
+    return ckpt.save_pytree(path, tree, extra=meta)
 
 
-def load_artifact(path: str) -> Tuple[ServingParams, dict]:
+def _rebuild_tied_head(sp: ServingParams) -> ServingParams:
+    if sp.head is None and sp.head_t is None:
+        sp.head_t = jnp.asarray(sp.embed).T
+    return sp
+
+
+def load_artifact_tiers(path: str
+                        ) -> Tuple[ServingParams,
+                                   Optional[ServingParams], dict]:
+    """Boot EVERY tier of a serving artifact from ONE deserialization pass.
+
+    Returns (target, draft-or-None, manifest-extra). This is the
+    speculative-serving boot path: loading the two-tier tree once keeps
+    the dense leaves the tiers share deduped IN MEMORY too (the draft's
+    embed/norm leaves are the same loaded arrays as the target's), where
+    two separate :func:`load_artifact` calls would materialize the whole
+    artifact twice."""
+    tree, manifest = ckpt.load_pytree(path)
+    extra = manifest.get("extra", manifest)
+    if isinstance(tree, ServingParams):
+        return _rebuild_tied_head(tree), None, extra
+    if isinstance(tree, dict) and "target" in tree:
+        draft = tree.get("draft")
+        return (_rebuild_tied_head(tree["target"]),
+                _rebuild_tied_head(draft) if draft is not None else None,
+                extra)
+    raise TypeError(f"{path}: artifact does not contain ServingParams")
+
+
+def load_artifact(path: str, tier: str = "target"
+                  ) -> Tuple[ServingParams, dict]:
     """Boot a ServingParams from :func:`save_artifact` output WITHOUT
     re-running search/quantize/prune/pack. Returns (sp, manifest-extra).
     The tied-head cache is recomputed; re-shard with :func:`shard` if a
-    macro mesh is wanted."""
-    sp, manifest = ckpt.load_pytree(path)
-    if not isinstance(sp, ServingParams):
-        raise TypeError(f"{path}: artifact does not contain ServingParams")
-    if sp.head is None and sp.head_t is None:
-        sp.head_t = jnp.asarray(sp.embed).T
-    return sp, manifest.get("extra", manifest)
+    macro mesh is wanted.
+
+    ``tier`` selects the packing of a two-tier (speculative) artifact:
+    ``"target"`` (also the whole content of a single-tier artifact) or
+    ``"draft"`` (raises on artifacts saved without one). To boot BOTH
+    tiers, use :func:`load_artifact_tiers` - one deserialization pass
+    instead of two."""
+    target, draft, extra = load_artifact_tiers(path)
+    if tier == "target":
+        return target, extra
+    if tier == "draft":
+        if draft is None:
+            raise ValueError(
+                f"{path}: artifact has no draft packing - re-save with "
+                "save_artifact(..., draft=...) for speculative serving")
+        return draft, extra
+    raise ValueError(f"{path}: unknown tier {tier!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -393,8 +462,8 @@ def decode_step_paged(sp: ServingParams, views_k: jnp.ndarray,
         x = x + attn
         h = L.rmsnorm(x, p["ln2"])
         x = x + _mlp(p, h, cfg)
-        ks.append(kn)
-        vs.append(vn)
+        ks.append(kn[:, 0])
+        vs.append(vn[:, 0])
     x = L.rmsnorm(x, sp.final_ln)
     logits = L.logits_out(_head(sp), x, cfg.cim)[:, 0, : cfg.vocab]
     return logits, jnp.stack(ks), jnp.stack(vs)

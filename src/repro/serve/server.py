@@ -32,6 +32,7 @@ from jax.sharding import Mesh
 from ..kernels.cim_bsr_matmul import MACRO_AXIS
 from ..models.config import ModelConfig
 from . import deployed, stacked
+from . import spec as spec_mod
 from .batching import PagedKVCache, Request, RequestQueue, Slot, kv_view_spec
 from .engine import ServeConfig, sample_tokens
 
@@ -76,6 +77,7 @@ class ServeReport:
     tpot_s: List[float]  # per decode token, pooled across requests
     outputs: Dict[str, np.ndarray]
     kv_stats: dict
+    spec: Optional[dict] = None  # speculative-decode acceptance telemetry
 
     @property
     def tokens_per_s(self) -> float:
@@ -97,7 +99,7 @@ class ServeReport:
                    / (self.n_decode_steps * self._n_slots))
 
     def to_json(self) -> dict:
-        return {
+        out = {
             "n_requests": self.n_requests,
             "total_tokens": self.total_tokens,
             "wall_s": round(self.wall_s, 4),
@@ -108,6 +110,9 @@ class ServeReport:
             "tpot": {k: round(v, 5) for k, v in _percentiles(self.tpot_s).items()},
             "kv": self.kv_stats,
         }
+        if self.spec is not None:
+            out["spec"] = self.spec
+        return out
 
 
 class BatchServer:
@@ -117,7 +122,9 @@ class BatchServer:
                  scfg: Optional[ServeConfig] = None,
                  bcfg: Optional[BatchConfig] = None,
                  continuous: bool = True, mesh: Optional[Mesh] = None,
-                 engine: str = "loop"):
+                 engine: str = "loop",
+                 draft: Optional[deployed.ServingParams] = None,
+                 spec: Optional[spec_mod.SpecConfig] = None):
         """``mesh`` (with a ``macro`` axis) turns on macro-cluster serving:
         pass ``deployed.shard(sp, mesh)`` as ``sp`` so projections run
         tensor-parallel, the gathered KV views are sharded heads-wise, and
@@ -125,17 +132,28 @@ class BatchServer:
         itself is unchanged - 1 and N devices run the same code.
 
         ``engine`` picks the decode runtime over the SAME weights:
-        ``"loop"`` (python loop over per-layer packed weights) or ``"scan"``
+        ``"loop"`` (python loop over per-layer packed weights), ``"scan"``
         (``serve.stacked``: one jitted lax.scan per step over the uniform
-        envelope, views donated). Both produce bit-identical greedy tokens;
-        scan is the compiled hot path."""
+        envelope, views donated), or ``"spec"`` (self-speculative: a
+        higher-sparsity ``draft`` tier proposes ``spec.k`` tokens with the
+        scan runtime and ONE multi-token target verify accepts the longest
+        greedy-matching prefix plus a correction token). All three produce
+        bit-identical greedy tokens; spec additionally requires greedy
+        decoding (temperature 0) - with sampling the acceptance rule would
+        need distribution-preserving rejection sampling, which this engine
+        does not implement."""
         if cfg.family == "vlm":
             raise NotImplementedError(
                 "BatchServer serves token-only requests; vlm prefill needs "
                 "per-request patch embeddings (use serve.Engine)")
         deployed._check_family(cfg)
-        if engine not in ("loop", "scan"):
-            raise ValueError(f"engine must be 'loop' or 'scan', got {engine!r}")
+        if engine not in ("loop", "scan", "spec"):
+            raise ValueError(
+                f"engine must be 'loop', 'scan' or 'spec', got {engine!r}")
+        if engine != "spec" and (draft is not None or spec is not None):
+            raise ValueError(
+                f"draft/spec are speculative-decode arguments but engine="
+                f"{engine!r} - pass engine='spec' to use them")
         self.cfg = cfg
         self.sp = sp
         self.engine = engine
@@ -150,15 +168,36 @@ class BatchServer:
         self._kv_scale = (self.n_devices
                           if mesh is not None
                           and kv_view_spec(cfg, mesh) is not None else 1)
-        if engine == "scan":
+        # the gathered views are throwaways: donate them so the scan's
+        # in-view dynamic_update_slice KV writes reuse the buffers
+        # (CPU XLA can't alias freshly-transferred host arrays and only
+        # warns, so donation is gated to real accelerator backends)
+        donate = (1, 2) if jax.default_backend() != "cpu" else ()
+        self.spec = None
+        if engine == "spec":
+            if draft is None:
+                raise ValueError(
+                    "engine='spec' needs a draft tier: pass draft="
+                    "spec.draft_serving(cfg, sp, draft_sparsity)")
+            if self.scfg.temperature > 0.0:
+                raise ValueError(
+                    "engine='spec' is greedy-only (temperature=0): the "
+                    "accept rule matches draft tokens against the target's "
+                    "argmaxes, which is exact only for greedy decode")
+            self.spec = spec if spec is not None else spec_mod.SpecConfig()
+            self._params = spec_mod.SpecParams.build(sp, draft)
+            self._prefill = jax.jit(stacked.prefill_last,
+                                    static_argnames=("cfg",))
+            self._verify = jax.jit(stacked.verify_step,
+                                   static_argnames=("cfg",),
+                                   donate_argnums=donate)
+            self._draft_propose = jax.jit(spec_mod.draft_propose,
+                                          static_argnames=("cfg", "k"),
+                                          donate_argnums=donate)
+        elif engine == "scan":
             self._params = stacked.stack(sp)
             self._prefill = jax.jit(stacked.prefill_last,
                                     static_argnames=("cfg",))
-            # the gathered views are throwaways: donate them so the scan's
-            # in-view dynamic_update_slice KV writes reuse the buffers
-            # (CPU XLA can't alias freshly-transferred host arrays and only
-            # warns, so donation is gated to real accelerator backends)
-            donate = (1, 2) if jax.default_backend() != "cpu" else ()
             self._decode = jax.jit(stacked.decode_step_paged,
                                    static_argnames=("cfg",),
                                    donate_argnums=donate)
@@ -168,6 +207,9 @@ class BatchServer:
                                     static_argnames=("cfg",))
             self._decode = jax.jit(deployed.decode_step_paged,
                                    static_argnames=("cfg",))
+        # speculative lookahead: a verify writes KV up to pos+k, so
+        # worst-case reservation must cover k extra positions per slot
+        self._lookahead = self.spec.k if self.spec is not None else 0
 
     def _sample_row(self, logits: jnp.ndarray, key) -> np.ndarray:
         return np.asarray(sample_tokens(logits, key, self.scfg), np.int32)
@@ -175,14 +217,18 @@ class BatchServer:
     # -- admission ----------------------------------------------------------
 
     def _worst_blocks(self, req: Request) -> int:
-        return -(-(len(req.prompt) + req.max_new_tokens) // self.bcfg.block_size)
+        """Worst-case block demand: prompt + every decode token, plus the
+        speculative lookahead (a verify pass writes candidate KV up to k
+        positions past the committed stream)."""
+        worst = len(req.prompt) + req.max_new_tokens + self._lookahead
+        return -(-worst // self.bcfg.block_size)
 
     def _reserved(self, slots: List[Optional[Slot]], kv: PagedKVCache) -> int:
         """Blocks active slots may still demand beyond what they hold."""
         r = 0
         for i, s in enumerate(slots):
             if s is not None:
-                r += max(0, kv.blocks_for(s.worst_positions)
+                r += max(0, kv.blocks_for(s.worst_positions + self._lookahead)
                          - len(kv.tables[i]))
         return r
 
@@ -212,10 +258,20 @@ class BatchServer:
         tlen = len(req.prompt)
         pad = (-tlen) % bs
         toks = np.pad(req.prompt, (0, pad))[None]  # (1, S_pad)
-        logits, k, v = self._prefill(self._params, jnp.asarray(toks),
+        target = (self._params.target if self.spec is not None
+                  else self._params)
+        logits, k, v = self._prefill(target, jnp.asarray(toks),
                                      jnp.asarray(tlen, jnp.int32),
                                      cfg=self.cfg)
         kv.write_prefill(i, k[:, 0], v[:, 0], tlen)
+        if self.spec is not None:
+            # draft-tier prefill: keeps the draft cache in lockstep with
+            # the target from the first decode step (its logits are unused
+            # - the first emitted token is the TARGET's, like any engine)
+            _, kd, vd = self._prefill(self._params.draft, jnp.asarray(toks),
+                                      jnp.asarray(tlen, jnp.int32),
+                                      cfg=self.cfg)
+            kv.write_prefill(i, kd[:, 0], vd[:, 0], tlen, tier=1)
         tok = int(self._sample_row(logits, key)[0])
         now = self._now()
         return Slot(req=req, pos=tlen, next_token=tok, out=[tok],
@@ -226,17 +282,98 @@ class BatchServer:
     def _now(self) -> float:
         return time.monotonic() - self._t0
 
+    def _gather_views(self, slots: List[Optional[Slot]], kv: PagedKVCache,
+                      active: List[int], lookahead: int, tier: int = 0):
+        """Grow tables to cover this step's writes, then gather a bucketed
+        contiguous view of one KV tier."""
+        for i in active:
+            kv.ensure(i, slots[i].pos + 1 + lookahead)
+        nv = max(len(kv.tables[i]) for i in active)
+        nv = -(-nv // self.bcfg.view_bucket) * self.bcfg.view_bucket
+        return kv.gather(nv, tier=tier)
+
+    def _decode_step(self, slots: List[Optional[Slot]], kv: PagedKVCache,
+                     active: List[int], key) -> List[tuple]:
+        """One single-token decode over all slots (loop/scan engines).
+        Returns [(slot index, [token]), ...] after committing the KV."""
+        views_k, views_v = self._gather_views(slots, kv, active, 0)
+        pos = np.array([s.pos if s else 0 for s in slots], np.int32)
+        toks = np.array([[s.next_token if s else 0] for s in slots],
+                        np.int32)
+        logits, k_new, v_new = self._decode(
+            self._params, views_k, views_v, jnp.asarray(pos),
+            jnp.asarray(toks), cfg=self.cfg)
+        pb, off = kv.write_coords([s.pos if s else None for s in slots])
+        kv.write_token(pb, off, k_new, v_new)
+        sampled = self._sample_row(logits, key)
+        return [(i, [int(sampled[i])]) for i in active]
+
+    def _spec_step(self, slots: List[Optional[Slot]], kv: PagedKVCache,
+                   active: List[int]) -> List[tuple]:
+        """One draft-k-verify speculative round over all slots.
+
+        The jitted draft loop proposes ``k`` tokens per row over the
+        draft-tier views; ONE batched multi-token ``verify_step`` scores
+        the pending token plus the whole draft run on the target tier. Per
+        slot, the longest prefix of the draft run matching the target's own
+        greedy argmaxes is accepted, plus the target's correction token -
+        so the emitted stream is bit-identical to target-only greedy
+        decode. Only the accepted entries of BOTH tiers' candidate KV are
+        committed (``write_run``); rejected draft KV never reaches the
+        pool - that is the rollback. Returns [(slot index, tokens), ...]
+        with 1..k+1 tokens per slot."""
+        t_round = time.monotonic()
+        k = self.spec.k
+        pos_np = np.array([s.pos if s else 0 for s in slots], np.int32)
+        toks = np.array([[s.next_token if s else 0] for s in slots],
+                        np.int32)
+        pos = jnp.asarray(pos_np)
+        dk, dv = self._gather_views(slots, kv, active, k, tier=1)
+        props, d_ks, d_vs = self._draft_propose(
+            self._params.draft, dk, dv, pos, jnp.asarray(toks),
+            cfg=self.cfg, k=k)
+        tk, tv = self._gather_views(slots, kv, active, k, tier=0)
+        ver_toks = jnp.concatenate([jnp.asarray(toks), props], axis=1)
+        logits, t_ks, t_vs = self._verify(self._params.target, tk, tv, pos,
+                                          ver_toks, cfg=self.cfg)
+        # greedy targets for every position of the run (B, k+1)
+        y = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        props_np = np.asarray(props)
+        d_ks, d_vs = np.asarray(d_ks), np.asarray(d_vs)
+        t_ks, t_vs = np.asarray(t_ks), np.asarray(t_vs)
+        runs = []
+        for i in active:
+            s = slots[i]
+            a = spec_mod.accept_greedy(props_np[i], y[i, :k])
+            emitted = [int(t) for t in y[i, : a + 1]]
+            # cap at the request budget and cut at EOS - exactly where
+            # sequential decode would have stopped emitting
+            emitted = emitted[: s.req.max_new_tokens - len(s.out)]
+            if self.scfg.eos_id >= 0 and self.scfg.eos_id in emitted:
+                emitted = emitted[: emitted.index(self.scfg.eos_id) + 1]
+            e = len(emitted)
+            kv.write_run(i, s.pos, t_ks[:, i, :e], t_vs[:, i, :e], tier=0)
+            kv.write_run(i, s.pos, d_ks[:, i, :e], d_vs[:, i, :e], tier=1)
+            self._spec_stats.record(n_accepted=min(a, e - 1), n_emitted=e)
+            runs.append((i, emitted))
+        self._spec_stats.round_s.append(time.monotonic() - t_round)
+        return runs
+
     def run(self, requests: List[Request]) -> ServeReport:
         cfg, bcfg, scfg = self.cfg, self.bcfg, self.scfg
         q = RequestQueue(requests)
         kv = PagedKVCache(cfg, bcfg.n_slots, bcfg.n_blocks * self._kv_scale,
-                          bcfg.block_size, mesh=self.mesh)
+                          bcfg.block_size, mesh=self.mesh,
+                          tiers=2 if self.spec is not None else 1)
         slots: List[Optional[Slot]] = [None] * bcfg.n_slots
         outputs: Dict[str, np.ndarray] = {}
         ttft: List[float] = []
         tpot: List[float] = []
         key = jax.random.PRNGKey(scfg.seed)
         n_steps = 0
+        self._spec_stats = (spec_mod.SpecStats(self.spec.k,
+                                               self.spec.draft_sparsity)
+                            if self.spec is not None else None)
         self._t0 = time.monotonic()
 
         def finish(i: int) -> None:
@@ -263,31 +400,20 @@ class BatchServer:
                         time.sleep(min(wait, bcfg.idle_wait_s))
                 continue
 
-            for i in active:
-                kv.ensure(i, slots[i].pos + 1)
-            nv = max(len(kv.tables[i]) for i in active)
-            nv = -(-nv // bcfg.view_bucket) * bcfg.view_bucket
-            views_k, views_v = kv.gather(nv)
-            pos = np.array([s.pos if s else 0 for s in slots], np.int32)
-            toks = np.array([[s.next_token if s else 0] for s in slots],
-                            np.int32)
-            logits, k_new, v_new = self._decode(
-                self._params, views_k, views_v, jnp.asarray(pos),
-                jnp.asarray(toks), cfg=cfg)
-            pb, off = kv.write_coords(
-                [s.pos if s else None for s in slots])
-            kv.write_token(pb, off, k_new, v_new)
+            if self.spec is not None:
+                runs = self._spec_step(slots, kv, active)
+            else:
+                runs = self._decode_step(slots, kv, active, k_dec)
             n_steps += 1
-            sampled = self._sample_row(logits, k_dec)
             now = self._now()
-            for i in active:
+            for i, toks in runs:
                 s = slots[i]
-                s.pos += 1
-                tok = int(sampled[i])
-                s.out.append(tok)
-                s.token_times.append(now)
-                s.next_token = tok
-                if s.done or tok == scfg.eos_id:
+                for tok in toks:
+                    s.pos += 1
+                    s.out.append(tok)
+                    s.token_times.append(now)
+                    s.next_token = tok
+                if s.done or s.next_token == scfg.eos_id:
                     finish(i)
 
         wall = self._now()
@@ -298,6 +424,8 @@ class BatchServer:
             n_requests=len(outputs), total_tokens=total, wall_s=wall,
             n_decode_steps=n_steps, ttft_s=ttft, tpot_s=tpot,
             outputs=outputs, kv_stats=stats,
+            spec=(self._spec_stats.to_json()
+                  if self._spec_stats is not None else None),
         )
         rep._n_slots = bcfg.n_slots
         return rep

@@ -1,0 +1,292 @@
+"""Self-speculative decoding over two-tier CIM compression.
+
+MARS's co-design insight is that CIM-aware sparsity is a *knob*: the same
+macro fabric can host the same weights at different compression points
+(CIMPool pushes pooled weights to aggressive compression; CIMinus models
+the sparse-tier cost). This module turns that knob into decode throughput:
+
+  * the DRAFT tier is a second, higher-sparsity BSR packing of the same
+    ServingParams - every deployed projection is re-pruned with
+    ``core.sparsity.prune_mask_2d`` at ``draft_sparsity``, packed with the
+    SAME uniform tile, and stacked through ``core.deploy.stack_deployed``
+    (:func:`draft_serving`);
+  * the TARGET tier is the existing compressed (or dense) model;
+  * :class:`SpecParams` holds both tiers as ``StackedParams`` sharing one
+    :class:`~repro.serve.batching.PagedKVCache` layout (tier 0 = target KV,
+    tier 1 = draft KV - same block tables, same positions);
+  * :func:`draft_propose` is the jitted draft loop: k greedy proposals with
+    the compiled scan runtime (plus one trailing KV-fill step so the draft
+    cache covers every position the target may commit);
+  * ``serve.stacked.verify_step`` is the single batched multi-token target
+    pass that scores the whole draft run at once.
+
+Exactness contract: greedy acceptance takes the longest prefix of the
+draft run that matches the target's own greedy argmaxes, plus the target's
+correction token - so the emitted stream is BIT-IDENTICAL to target-only
+greedy decode (``tests/test_spec.py`` enforces it, dense and compressed,
+single-device and macro-sharded). The draft tier can only change HOW FAST
+tokens appear, never WHICH tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import deploy as D
+from ..core import sparsity as S
+from ..kernels import ops
+from ..models.config import ModelConfig
+from . import deployed as DP
+from . import stacked as ST
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decode knobs. ``k`` draft tokens are proposed per
+    verify; ``draft_sparsity`` is the draft tier's block-pruning target
+    (``sched.search.search_spec`` picks both from the simulated
+    reload+compute cost)."""
+
+    k: int = 4
+    draft_sparsity: float = 0.9
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError("spec: k must be >= 1")
+        if not 0.0 <= self.draft_sparsity < 1.0:
+            raise ValueError("spec: draft_sparsity must be in [0, 1)")
+
+
+@dataclasses.dataclass
+class SpecParams:
+    """Two-tier stacked serving weights (pytree): the compressed/dense
+    ``target`` and the higher-sparsity ``draft``, both as StackedParams so
+    either tier runs the compiled scan runtime. Both tiers describe the
+    same architecture, so one PagedKVCache block layout serves both
+    caches."""
+
+    target: ST.StackedParams
+    draft: ST.StackedParams
+
+    def __post_init__(self):
+        if self.target.n_layers != self.draft.n_layers:
+            raise ValueError(
+                f"spec: target has {self.target.n_layers} layers, draft "
+                f"{self.draft.n_layers} - tiers must share the architecture")
+        for k, sw in self.draft.packed.items():
+            tw = self.target.packed.get(k)
+            if tw is not None and tw.tile != sw.tile:
+                raise ValueError(
+                    f"spec: projection {k!r} packed with tile {sw.tile} in "
+                    f"the draft but {tw.tile} in the target - the tiers "
+                    "must share one uniform tile")
+
+    @classmethod
+    def build(cls, target_sp: DP.ServingParams,
+              draft_sp: DP.ServingParams) -> "SpecParams":
+        """Stack both tiers' ServingParams into the compiled envelopes."""
+        return cls(target=ST.stack(target_sp), draft=ST.stack(draft_sp))
+
+
+jax.tree_util.register_pytree_node(
+    SpecParams,
+    lambda sp: ((sp.target, sp.draft), None),
+    lambda aux, ch: SpecParams(*ch),
+)
+
+
+# ---------------------------------------------------------------------------
+# Draft tier construction: re-prune the SAME weights at a higher sparsity
+# ---------------------------------------------------------------------------
+
+
+def _dense_from_packed(p: dict, d_in: int, d_out: int,
+                       bits: int) -> np.ndarray:
+    """Dequantized dense view of one packed projection dict (host-side;
+    ``core.mapping.bsr_to_dense`` handles the truncated-packing guard).
+    ``pack_for_kernel`` packings carry ONE uniform scale, so dequant is a
+    scalar multiply."""
+    from ..core.mapping import BsrWeight, bsr_to_dense
+
+    blocks = np.asarray(p["blocks"])
+    bk, bn = blocks.shape[2], blocks.shape[3]
+    bw = BsrWeight(blocks, np.asarray(p["row_idx"]), np.asarray(p["nnz"]),
+                   bk, bn, d_in, d_out)
+    scales = np.asarray(p["scales"])
+    scale = (float(scales.max()) if scales.size and scales.max() > 0
+             else 1.0 / 2.0 ** (bits - 1))
+    return bsr_to_dense(bw).astype(np.float32) * scale
+
+
+def _redeploy_sparser(dw: D.DeployedWeight, draft_sparsity: float
+                      ) -> D.DeployedWeight:
+    """Re-prune an already-packed projection at a higher sparsity.
+
+    The packed blocks are dequantized to their dense (already quantized)
+    values, ``prune_mask_2d`` drops the lowest-norm tiles down to
+    ``draft_sparsity``, and the survivors are re-packed with the SAME tile.
+    Masking quantized levels with 0/1 keeps the surviving blocks' int8
+    levels bit-identical to the target tier's - the draft differs from the
+    target ONLY in which blocks exist."""
+    if dw.mesh is not None:
+        raise ValueError(
+            "build the draft tier from the placement-free packing and "
+            "shard both tiers afterwards (deployed.shard)")
+    bk, bn = dw.tile
+    packed = []
+    for p in dw.packed:
+        w = _dense_from_packed(p, dw.d_in, dw.d_out, dw.bits)
+        mask = np.asarray(S.prune_mask_2d(jnp.asarray(w), bk, bn,
+                                          draft_sparsity))
+        packed.append(ops.pack_for_kernel(w * mask, bits=dw.bits,
+                                          bk=bk, bn=bn))
+    return D.DeployedWeight(packed, dw.d_in, dw.d_out, dw.bits)
+
+
+def draft_serving(cfg: ModelConfig, sp: DP.ServingParams,
+                  draft_sparsity: float,
+                  tile: Optional[Tuple[int, int]] = None
+                  ) -> DP.ServingParams:
+    """Second, higher-sparsity BSR packing of the same ServingParams.
+
+    Compressed projections are re-pruned (:func:`_redeploy_sparser`) with
+    their existing tile; raw (dense-serving) projections run the full
+    ``deploy_weight`` pipeline at ``draft_sparsity`` with one uniform tile
+    (``tile`` or the model's ``cim_alpha``, fitted network-wide so the
+    draft stacks). Dense leaves (embed, norms, MoE expert stacks, the
+    tied-head cache) are SHARED BY REFERENCE with the target - two-tier
+    artifacts store them once.
+    """
+    g, a = tile if tile is not None else (cfg.cim_alpha, cfg.cim_alpha)
+    net_tile = D.uniform_fit_tile(DP._projection_shapes(sp), g, a)
+
+    def pack(v):
+        if isinstance(v, D.DeployedWeight):
+            return _redeploy_sparser(v, draft_sparsity)
+        return D.deploy_weight(v, cfg.cim, bk=net_tile[0], bn=net_tile[1],
+                               target_sparsity=draft_sparsity)
+
+    layers = []
+    for p in sp.layers:
+        q = dict(p)
+        for proj in DP.PROJECTIONS:
+            w = q.get(proj)
+            if w is None:
+                continue
+            if isinstance(w, D.DeployedWeight) or getattr(w, "ndim", 0) == 2:
+                q[proj] = pack(w)
+        layers.append(q)
+    head = pack(sp.head) if sp.head is not None else None
+    return DP.ServingParams(embed=sp.embed, final_ln=sp.final_ln,
+                            layers=layers, head=head, mm_proj=sp.mm_proj,
+                            head_t=sp.head_t)
+
+
+# ---------------------------------------------------------------------------
+# The jitted draft loop: k greedy proposals with the scan runtime
+# ---------------------------------------------------------------------------
+
+
+def draft_propose(draft: ST.StackedParams, views_k: jnp.ndarray,
+                  views_v: jnp.ndarray, pos: jnp.ndarray,
+                  tokens: jnp.ndarray, cfg: ModelConfig, k: int):
+    """Greedy-propose ``k`` draft tokens per row over the draft-tier views.
+
+    Runs ``k+1`` compiled ``decode_step_paged`` scan steps (the compiled
+    runtime - one kernel dispatch per step), carrying the in-flight KV
+    writes through the gathered views. The extra trailing step consumes the
+    last proposal so the returned draft KV covers positions
+    ``pos .. pos+k`` - every position the target may commit when the whole
+    run is accepted - keeping the draft cache in lockstep with the target
+    cache at all acceptance outcomes.
+
+    Returns (proposals (B, k) int32, k_new (L, B, k+1, KV, dh), v_new).
+    """
+    b = tokens.shape[0]
+    rows = jnp.arange(b)
+    props, ks_all, vs_all = [], [], []
+    tok = tokens  # (B, 1): each row's pending input token
+    for t in range(k + 1):
+        logits, ks, vs = ST.decode_step_paged(draft, views_k, views_v,
+                                              pos + t, tok, cfg)
+        views_k = views_k.at[:, rows, pos + t].set(ks)
+        views_v = views_v.at[:, rows, pos + t].set(vs)
+        ks_all.append(ks)
+        vs_all.append(vs)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        if t < k:
+            props.append(tok[:, 0])
+    return (jnp.stack(props, axis=1), jnp.stack(ks_all, axis=2),
+            jnp.stack(vs_all, axis=2))
+
+
+def accept_greedy(proposals: np.ndarray, targets: np.ndarray) -> int:
+    """Longest greedy-matching prefix: the number of draft tokens (row
+    vectors ``proposals`` (k,) vs the target's argmaxes ``targets`` (k,))
+    accepted before the first disagreement."""
+    a = 0
+    while a < len(proposals) and int(proposals[a]) == int(targets[a]):
+        a += 1
+    return a
+
+
+@dataclasses.dataclass
+class SpecStats:
+    """Host-side acceptance + round-latency telemetry over a serve run.
+
+    All tokens of one round materialize together (one draft loop + one
+    verify), so per-token arrival diffs inside a round are legitimately
+    zero - the meaningful decode-latency unit for the spec engine is the
+    ROUND, recorded here (``round_s``), not the pooled per-token diffs.
+
+    ``record`` is called once per ACTIVE SLOT of a round: ``slot_rounds``
+    / ``proposed`` / ``accepted`` count slot-rounds (a round over B active
+    slots proposes B*k draft tokens), while ``len(round_s)`` counts the
+    batched rounds themselves."""
+
+    k: int
+    draft_sparsity: float
+    slot_rounds: int = 0
+    proposed: int = 0
+    accepted: int = 0
+    emitted: int = 0
+    round_s: list = dataclasses.field(default_factory=list)
+
+    def record(self, n_accepted: int, n_emitted: int) -> None:
+        self.slot_rounds += 1
+        self.proposed += self.k
+        self.accepted += n_accepted
+        self.emitted += n_emitted
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else 0.0
+
+    @property
+    def tokens_per_verify(self) -> float:
+        """Emitted tokens per slot-round (= per verify lane)."""
+        return self.emitted / self.slot_rounds if self.slot_rounds else 0.0
+
+    @property
+    def round_p50_s(self) -> float:
+        return float(np.percentile(self.round_s, 50)) if self.round_s else 0.0
+
+    def to_json(self) -> dict:
+        per_tok = (self.round_p50_s / max(self.tokens_per_verify, 1e-9)
+                   if self.round_s else 0.0)
+        return {
+            "k": self.k,
+            "draft_sparsity": self.draft_sparsity,
+            "n_rounds": len(self.round_s),  # batched draft+verify rounds
+            "slot_rounds": self.slot_rounds,  # per-active-slot lanes
+            "proposed": self.proposed,
+            "accepted": self.accepted,
+            "acceptance_rate": round(self.acceptance_rate, 4),
+            "tokens_per_verify": round(self.tokens_per_verify, 3),
+            "round_p50_ms": round(self.round_p50_s * 1e3, 3),
+            "ms_per_token_p50": round(per_tok * 1e3, 3),
+        }

@@ -219,12 +219,68 @@ def decode_step_paged(sxp: StackedParams, views_k: jnp.ndarray,
         x = x + attn
         h = L.rmsnorm(x, p["ln2"])
         x = x + DP._mlp(p, h, cfg)
-        return x, (kn, vn)
+        return x, (kn[:, 0], vn[:, 0])
 
     x, (ks, vs) = jax.lax.scan(
         body, x, _scan_xs(sxp, cfg, views_k, views_v))
     x = L.rmsnorm(x, sxp.final_ln)
     logits = L.logits_out(_head(sxp), x, cfg.cim)[:, 0, : cfg.vocab]
+    return logits, ks, vs
+
+
+def _mlp_tokenwise(p: dict, h, cfg: ModelConfig):
+    """MLP over (B, T, D) with SEQUENTIAL-DECODE semantics per token.
+
+    The dense-family MLP is position-independent, but ``moe_block`` routes
+    with a capacity computed from the sequence length - a T-token pass
+    would share capacity across the T tokens and could drop a (token,
+    expert) pair that a one-token decode step keeps. Folding T into the
+    batch axis gives every token the exact s=1 routing the sequential
+    decode steps use, which is what the verify pass's bit-exactness
+    contract requires."""
+    if cfg.family != "moe":
+        return DP._mlp(p, h, cfg)
+    b, t, d = h.shape
+    return DP._mlp(p, h.reshape(b * t, 1, d), cfg).reshape(b, t, d)
+
+
+def verify_step(sxp: StackedParams, views_k: jnp.ndarray,
+                views_v: jnp.ndarray, pos: jnp.ndarray, tokens: jnp.ndarray,
+                cfg: ModelConfig):
+    """Batched multi-token target pass for speculative decoding.
+
+    ``tokens`` (B, T) are row b's next T input tokens at absolute positions
+    ``pos[b] .. pos[b]+T-1`` (the pending token followed by the draft run);
+    a prefill-style causal pass over the gathered paged views with per-row
+    positions (``layers.decode_attention_multi``), compiled as the same
+    single ``lax.scan`` as :func:`decode_step_paged`.
+
+    Returns (logits (B, T, V), k_new (L, B, T, KV, dh), v_new): position
+    ``t``'s logits are BIT-IDENTICAL to what T sequential
+    ``decode_step_paged`` calls would produce after consuming
+    ``tokens[:, :t+1]`` - every op is row/position-independent and masked
+    view padding is numerically inert - so greedy acceptance against these
+    logits reproduces target-only greedy decode exactly. The caller commits
+    only the accepted prefix of k_new/v_new to the KV pool (rejecting a
+    draft suffix is a write-back rollback, not a compute rollback)."""
+    x = L.embed(sxp.embed, tokens, cfg.param_dtype)  # (B, T, D)
+
+    def body(x, xs):
+        li, p_dense, w, t, kview, vview = xs
+        p = _layer_view(sxp, p_dense, li)
+        cfg_l = transformer._with_theta(cfg, t)
+        h = L.rmsnorm(x, p["ln1"])
+        attn, kn, vn = L.decode_attention_multi(p, h, kview, vview, pos,
+                                                cfg_l, window=w)
+        x = x + attn
+        h = L.rmsnorm(x, p["ln2"])
+        x = x + _mlp_tokenwise(p, h, cfg)
+        return x, (kn, vn)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, _scan_xs(sxp, cfg, views_k, views_v))
+    x = L.rmsnorm(x, sxp.final_ln)
+    logits = L.logits_out(_head(sxp), x, cfg.cim)[..., : cfg.vocab]
     return logits, ks, vs
 
 

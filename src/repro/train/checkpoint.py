@@ -93,10 +93,17 @@ def _serving_cls():
     return ServingParams
 
 
-def tree_spec(tree: Any, leaves: List[np.ndarray]) -> Any:
+def tree_spec(tree: Any, leaves: List[np.ndarray],
+              _memo: Optional[dict] = None) -> Any:
     """Recursively describe ``tree`` as JSON, appending array leaves (host
-    numpy, dtype preserved - int8 stays int8) to ``leaves`` in order."""
+    numpy, dtype preserved - int8 stays int8) to ``leaves`` in order.
+
+    Leaves that are the SAME object (by identity) are stored once and
+    referenced by the same index - a two-tier serving artifact whose draft
+    shares the target's dense leaves by reference pays for them once."""
     D = _deploy_mod()
+    if _memo is None:
+        _memo = {}
     if tree is None:
         return {"t": "none"}
     if isinstance(tree, D.DeployedWeight):
@@ -106,7 +113,8 @@ def tree_spec(tree: Any, leaves: List[np.ndarray]) -> Any:
                 "(mesh is excluded from artifact aux by design)")
         return {"t": "deployed", "d_in": tree.d_in, "d_out": tree.d_out,
                 "bits": tree.bits,
-                "packed": [tree_spec(p, leaves) for p in tree.packed]}
+                "packed": [tree_spec(p, leaves, _memo)
+                           for p in tree.packed]}
     if isinstance(tree, D.StackedWeight):
         if tree.mesh is not None:
             raise ValueError(
@@ -114,25 +122,31 @@ def tree_spec(tree: Any, leaves: List[np.ndarray]) -> Any:
                 "artifact aux); restack on the serving host's mesh")
         return {"t": "stacked", "d_in": tree.d_in, "d_out": tree.d_out,
                 "bits": tree.bits,
-                "arrays": [tree_spec(getattr(tree, k), leaves)
+                "arrays": [tree_spec(getattr(tree, k), leaves, _memo)
                            for k in ("blocks", "scales", "row_idx", "nnz",
                                      "col_inv")]}
     if isinstance(tree, _serving_cls()):
         return {"t": "serving_params",
-                "fields": [tree_spec(getattr(tree, k), leaves)
+                "fields": [tree_spec(getattr(tree, k), leaves, _memo)
                            for k in ("embed", "final_ln", "layers", "head",
                                      "mm_proj", "head_t")]}
     if isinstance(tree, dict):
-        return {"t": "dict", "items": [[str(k), tree_spec(v, leaves)]
+        return {"t": "dict", "items": [[str(k), tree_spec(v, leaves, _memo)]
                                        for k, v in tree.items()]}
     if isinstance(tree, (list, tuple)):
         return {"t": "list" if isinstance(tree, list) else "tuple",
-                "items": [tree_spec(v, leaves) for v in tree]}
+                "items": [tree_spec(v, leaves, _memo) for v in tree]}
     if isinstance(tree, (bool, int, float, str)):
         return {"t": "py", "v": tree}
-    arr = np.asarray(jax.device_get(tree))
-    leaves.append(arr)
-    return {"t": "arr", "i": len(leaves) - 1, "dtype": str(arr.dtype),
+    if id(tree) in _memo:
+        i = _memo[id(tree)]
+        arr = leaves[i]
+    else:
+        arr = np.asarray(jax.device_get(tree))
+        leaves.append(arr)
+        i = len(leaves) - 1
+        _memo[id(tree)] = i
+    return {"t": "arr", "i": i, "dtype": str(arr.dtype),
             "shape": list(arr.shape)}
 
 

@@ -104,3 +104,84 @@ def test_scfg_not_shared_between_engines():
     assert e1.scfg is not e2.scfg
     e1.scfg.max_new_tokens = 99
     assert e2.scfg.max_new_tokens != 99
+
+
+# ---------------------------------------------------------------------------
+# Sampling path (temperature > 0)
+# ---------------------------------------------------------------------------
+
+
+def test_sample_tokens_seeded_determinism():
+    """Same (logits, key, config) -> same tokens; the sampling path must be
+    exactly reproducible under a fixed seed."""
+    from repro.serve.engine import sample_tokens
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((4, 64)) * 3.0, jnp.float32)
+    scfg = ServeConfig(temperature=0.8)
+    key = jax.random.PRNGKey(42)
+    a = np.asarray(sample_tokens(logits, key, scfg))
+    b = np.asarray(sample_tokens(logits, key, scfg))
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.int32 and a.shape == (4,)
+    # a different key must be able to change the draw (not a constant fn)
+    draws = {tuple(np.asarray(sample_tokens(logits, jax.random.PRNGKey(s),
+                                            scfg)).tolist())
+             for s in range(8)}
+    assert len(draws) > 1
+    # temperature <= 0 ignores the key entirely (greedy)
+    g1 = np.asarray(sample_tokens(logits, jax.random.PRNGKey(0),
+                                  ServeConfig(temperature=0.0)))
+    g2 = np.asarray(sample_tokens(logits, jax.random.PRNGKey(7),
+                                  ServeConfig(temperature=0.0)))
+    np.testing.assert_array_equal(g1, g2)
+    np.testing.assert_array_equal(g1, np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_sample_tokens_temperature_sharpens():
+    """As temperature -> 0 the categorical draw must converge to argmax."""
+    from repro.serve.engine import sample_tokens
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.standard_normal((8, 32)) * 2.0, jnp.float32)
+    cold = np.asarray(sample_tokens(logits, jax.random.PRNGKey(0),
+                                    ServeConfig(temperature=1e-4)))
+    np.testing.assert_array_equal(cold, np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_engine_generate_seeded_determinism_at_temperature():
+    cfg, params = _mk("yi-6b")
+    batch = _batch(cfg)
+    scfg = ServeConfig(max_new_tokens=6, temperature=0.9, seed=5)
+    a = Engine(cfg, params, scfg).generate(batch)
+    b = Engine(cfg, params, scfg).generate(batch)
+    np.testing.assert_array_equal(a, b)
+    c = Engine(cfg, params, ServeConfig(max_new_tokens=6, temperature=0.9,
+                                        seed=6)).generate(batch)
+    assert not np.array_equal(a, c), "seed had no effect on sampling"
+
+
+def test_engine_vs_batch_server_prng_schedules_diverge():
+    """Regression pin for the documented divergence (serve.engine
+    docstring): Engine and BatchServer only produce identical tokens under
+    GREEDY decoding - with temperature > 0 their PRNG key schedules differ
+    (per-batch-step splits vs per-slot/admission splits), so the same seed
+    yields different (but individually deterministic) streams. If this
+    test ever fails on the 'diverge' assert, the schedules were unified -
+    update the sample_tokens docstring and drop the caveat."""
+    from repro.serve import BatchConfig, BatchServer, Request
+    from repro.serve import deployed as DP
+    cfg, params = _mk("yi-6b")
+    prompt = np.arange(5, dtype=np.int32)
+    scfg = ServeConfig(max_new_tokens=8, temperature=0.9, seed=3)
+    eng = Engine(cfg, params, scfg).generate(
+        {"tokens": jnp.asarray(prompt[None])})[0]
+    srv = BatchServer(cfg, DP.from_params(cfg, params),
+                      ServeConfig(max_new_tokens=8, temperature=0.9, seed=3),
+                      BatchConfig(n_slots=2, block_size=4, n_blocks=16))
+    batched = srv.run([Request("r0", prompt, 8)]).outputs["r0"]
+    # both deterministic under their own schedule...
+    again = srv.run([Request("r0", prompt, 8)]).outputs["r0"]
+    np.testing.assert_array_equal(batched, again)
+    # ...but the schedules diverge from each other
+    assert not np.array_equal(eng, batched), (
+        "Engine and BatchServer PRNG schedules now coincide - update the "
+        "sample_tokens docstring")

@@ -166,12 +166,13 @@ def test_decode_attention_multi_matches_per_row(dense_model):
     vc = jnp.asarray(rng.standard_normal((B, Sv, KV, dh)), jnp.float32)
     pos = jnp.asarray([2, 5, 0], jnp.int32)
     y, kn, vn = L.decode_attention_multi(p, x, kc, vc, pos, cfg)
+    assert kn.shape == (B, 1, KV, dh)  # (B, T, KV, dh) with T=1
     for b in range(B):
         yb, kb, vb = L.decode_attention(p, x[b:b + 1], kc[b:b + 1],
                                         vc[b:b + 1], pos[b], cfg)
         np.testing.assert_allclose(np.asarray(y[b]), np.asarray(yb[0]),
                                    rtol=1e-5, atol=1e-5)
-        np.testing.assert_allclose(np.asarray(kn[b]),
+        np.testing.assert_allclose(np.asarray(kn[b, 0]),
                                    np.asarray(kb[0, pos[b]]), rtol=0, atol=0)
 
 
