@@ -160,9 +160,11 @@ class LayerPerf:
         return self.fm_access_dense / max(self.fm_access_mars, 1e-9)
 
 
-def _layer_cycles(l: ConvLayer, nnz: int, total_gs: int, w_bits: int,
+def _phase_cycles(l: ConvLayer, nnz: int, total_gs: int, w_bits: int,
                   a_bits: int, sparse_fetch: bool,
-                  hw: HardwareConfig = DEFAULT_HW) -> tuple[float, float]:
+                  hw: HardwareConfig = DEFAULT_HW) -> dict:
+    """Per-phase cycle components of one layer - the model's side of the
+    sim-vs-measured comparison (``repro.obs.gap``)."""
     pass_f = hw.pass_factor(w_bits, a_bits)
     compute = l.out_pixels * nnz * pass_f / hw.cores
     # IFM: one group-wide fetch per (pixel, surviving group-set); OFM: one
@@ -174,8 +176,42 @@ def _layer_cycles(l: ConvLayer, nnz: int, total_gs: int, w_bits: int,
     fm_cycles = (ifm + ofm) / hw.cores
     stored_bits = fetch_gs * hw.group * hw.alpha * w_bits
     reload = stored_bits / (hw.reload_bits_per_cycle * hw.cores)
-    cycles = max(compute, fm_cycles) + reload + hw.ctrl_overhead * l.out_pixels
-    return cycles, ifm + ofm
+    ctrl = hw.ctrl_overhead * l.out_pixels
+    return {"compute": compute, "fm": fm_cycles, "reload": reload,
+            "ctrl": ctrl, "fm_access": ifm + ofm,
+            "cycles": max(compute, fm_cycles) + reload + ctrl}
+
+
+def _layer_cycles(l: ConvLayer, nnz: int, total_gs: int, w_bits: int,
+                  a_bits: int, sparse_fetch: bool,
+                  hw: HardwareConfig = DEFAULT_HW) -> tuple[float, float]:
+    p = _phase_cycles(l, nnz, total_gs, w_bits, a_bits, sparse_fetch, hw=hw)
+    return p["cycles"], p["fm_access"]
+
+
+def layer_phase_cycles(l: ConvLayer, w_bits: int = 8, a_bits: int = 4,
+                       sparse: bool = True,
+                       hw: HardwareConfig = DEFAULT_HW) -> dict:
+    """{compute, fm, reload, ctrl} cycles of one layer under ``hw``'s
+    tiling (MARS sparse path by default, ``sparse=False`` for the dense
+    baseline)."""
+    total = l.groupsets_for(hw.group, hw.alpha)
+    nnz = l.nnz_for(hw.group, hw.alpha) if sparse else total
+    p = _phase_cycles(l, nnz, total, w_bits, a_bits, sparse_fetch=sparse,
+                      hw=hw)
+    return {k: p[k] for k in ("compute", "fm", "reload", "ctrl")}
+
+
+def network_phase_breakdown(layers: Sequence[ConvLayer], w_bits: int = 8,
+                            a_bits: int = 4, sparse: bool = True,
+                            hw: HardwareConfig = DEFAULT_HW) -> dict:
+    """Network-total per-phase cycles - what the measured per-phase wall
+    times from the tracer are compared against (``repro.obs.gap``)."""
+    out = {"compute": 0.0, "fm": 0.0, "reload": 0.0, "ctrl": 0.0}
+    for l in layers:
+        for k, v in layer_phase_cycles(l, w_bits, a_bits, sparse, hw).items():
+            out[k] += v
+    return out
 
 
 def evaluate_network(

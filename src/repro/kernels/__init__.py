@@ -1,3 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# ``timing`` is the fenced-dispatch observability hook: call kernels
+# through ``timing.DispatchTimer.timed`` to record block_until_ready'd
+# wall time per (name, shape, tile, backend). Disabled by default.
+from . import timing  # noqa: F401
+from .timing import DispatchRecord, DispatchTimer  # noqa: F401

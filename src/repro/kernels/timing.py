@@ -1,0 +1,105 @@
+"""Fenced kernel-dispatch timing hook.
+
+jax dispatch is asynchronous: a wall-clock around ``bsr_matmul_stacked``
+measures enqueue, not device work. This hook is the honest form - call the
+kernel through :meth:`DispatchTimer.timed` and the elapsed time spans
+dispatch PLUS ``jax.block_until_ready`` on every output, labeled with
+``(name, shape, tile, backend)`` so per-(shape, tile, backend) costs are
+separable in the report (the data the measured-latency tile autotuner,
+ROADMAP item 4, consumes).
+
+The hook lives OUTSIDE jit: timing inside a traced function is meaningless
+(and would bake host callbacks into the compiled step), so callers fence at
+the dispatch boundary - the serve loop does it per decode step, the gap
+comparator (``repro.obs.gap.kernel_gap``) per standalone kernel call. A
+disabled timer (the default ``TIMER``) forwards the call untouched: no
+fence, no clock, no allocation - tracing off must not serialize the
+pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchRecord:
+    """One fenced kernel call."""
+
+    name: str
+    shape: Optional[tuple]  # activation/problem shape, caller-defined
+    tile: Optional[tuple]  # (bk, bn) packing tile, None for dense dispatch
+    backend: str
+    seconds: float
+
+    @property
+    def key(self) -> tuple:
+        return (self.name, self.shape, self.tile, self.backend)
+
+
+class DispatchTimer:
+    """Thread-safe fenced wall-time recorder for kernel dispatches."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._lock = threading.Lock()
+        self.records: List[DispatchRecord] = []
+
+    def record(self, name: str, seconds: float, shape=None, tile=None,
+               backend: Optional[str] = None) -> None:
+        rec = DispatchRecord(
+            name, tuple(shape) if shape is not None else None,
+            tuple(tile) if tile is not None else None,
+            backend if backend is not None else jax.default_backend(),
+            float(seconds))
+        with self._lock:
+            self.records.append(rec)
+
+    def timed(self, name: str, shape, tile, fn, *args, **kw):
+        """Call ``fn(*args, **kw)``; when enabled, fence every output with
+        ``block_until_ready`` and record the wall time under
+        ``(name, shape, tile, backend)``. Disabled: a plain call."""
+        if not self.enabled:
+            return fn(*args, **kw)
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        out = jax.block_until_ready(out)
+        self.record(name, time.perf_counter() - t0, shape=shape, tile=tile)
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self.records.clear()
+
+    def summary(self) -> List[dict]:
+        """Per-(name, shape, tile, backend) aggregate rows, JSON-ready."""
+        with self._lock:
+            recs = list(self.records)
+        groups: Dict[tuple, List[float]] = {}
+        for r in recs:
+            groups.setdefault(r.key, []).append(r.seconds)
+        rows = []
+        for (name, shape, tile, backend), secs in sorted(
+                groups.items(), key=lambda kv: repr(kv[0])):
+            secs = sorted(secs)
+            rows.append({
+                "name": name,
+                "shape": list(shape) if shape is not None else None,
+                "tile": list(tile) if tile is not None else None,
+                "backend": backend,
+                "calls": len(secs),
+                "total_s": round(sum(secs), 6),
+                "min_ms": round(secs[0] * 1e3, 4),
+                "p50_ms": round(secs[len(secs) // 2] * 1e3, 4),
+                "max_ms": round(secs[-1] * 1e3, 4),
+            })
+        return rows
+
+
+# module-level default, DISABLED: importing this hook never slows a caller
+# that does not opt in
+TIMER = DispatchTimer(enabled=False)

@@ -28,6 +28,13 @@
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
       --compressed --spec k=4,draft_sparsity=0.9
 
+  # instrumented serve: Perfetto-loadable trace + metrics snapshot of the
+  # measured (post-warmup) run; add --profile DIR for an XLA-level
+  # jax.profiler trace
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
+      --compressed --runtime scan --trace-out /tmp/serve-trace.json \\
+      --metrics-out /tmp/serve-metrics.json
+
   # legacy static-batch Engine (any registry family)
   PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b --smoke \\
       --engine legacy --batch 4 --prompt-len 16 --new-tokens 32
@@ -35,6 +42,7 @@
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -43,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import registry
+from ..obs import MetricsRegistry, Tracer
 from ..serve import (BatchConfig, BatchServer, Engine, Request, ServeConfig,
                      SpecConfig, deployed, stacked)
 from ..serve import spec as spec_mod
@@ -248,14 +257,29 @@ def _batch(args, cfg, params):
              "loop": " (python loop over per-layer weights)",
              "spec": " (draft-k-verify speculative decode, greedy-exact)"
              }[engine])
+    tracer = Tracer() if args.trace_out else None
+    metrics = (MetricsRegistry()
+               if args.metrics_out or args.trace_out else None)
     srv = BatchServer(cfg, sp, ServeConfig(temperature=args.temperature,
                                            seed=args.seed), bcfg,
                       continuous=(args.engine == "batch"), mesh=mesh,
-                      engine=engine, draft=draft, spec=spec_cfg)
+                      engine=engine, draft=draft, spec=spec_cfg,
+                      tracer=tracer, metrics=metrics)
     trace = lambda: synthetic_trace(cfg, args.requests, args.prompt_len,
                                     args.new_tokens, seed=args.seed)
     srv.run(trace())  # compile
-    rep = srv.run(trace())
+    # the warmup run's spans/samples are compile noise: drop them (the
+    # tracer keeps its epoch + track names so the measured run's clocks
+    # stay consistent)
+    if tracer is not None:
+        tracer.clear()
+    if metrics is not None:
+        metrics.clear()
+    srv.timer.clear()
+    prof = (jax.profiler.trace(args.profile) if args.profile
+            else contextlib.nullcontext())
+    with prof:
+        rep = srv.run(trace())
     out = rep.to_json()
     if spec_cfg is not None and args.parity_check:
         # greedy-exactness audit: target-only scan decode over the same
@@ -269,6 +293,16 @@ def _batch(args, cfg, params):
     print(json.dumps(out, indent=1))
     for rid in list(rep.outputs)[:3]:
         print(f"  {rid}:", rep.outputs[rid].tolist())
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"trace: {len(tracer.to_chrome()['traceEvents'])} events -> "
+              f"{args.trace_out} (open in Perfetto / chrome://tracing)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(rep.metrics or {}, f, indent=1)
+        print(f"metrics: snapshot -> {args.metrics_out}")
+    if args.profile:
+        print(f"profile: jax.profiler trace -> {args.profile}")
 
 
 def main(argv=None):
@@ -304,6 +338,17 @@ def main(argv=None):
     ap.add_argument("--tile", default="",
                     help="BKxBN packing tile override (e.g. 16x16); default "
                     "is the searched schedule's tile")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the measured "
+                    "run (phase spans, request lifecycle tracks, occupancy "
+                    "counters) - open in Perfetto / chrome://tracing")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the measured run's metrics snapshot "
+                    "(counters/gauges/phase histograms + fenced kernel "
+                    "dispatch table) as JSON")
+    ap.add_argument("--profile", default="",
+                    help="directory for a jax.profiler trace of the "
+                    "measured run (XLA-level, TensorBoard-loadable)")
     ap.add_argument("--target-sparsity", type=float, default=0.5)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)

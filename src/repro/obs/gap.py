@@ -1,0 +1,181 @@
+"""Sim-vs-measured gap tracking: confront the model with the stopwatch.
+
+CIMinus argues sparse-CIM systems live or die by faithful workload modeling
+and CIM-Tuner closes the loop between the mapping search and measured
+hardware. This module is that loop for this repo: the analytic model
+(``core.perf_model``) and the event-driven simulator (``repro.sched``)
+predict where a step's cycles go (reload / compute / feature-map / ctrl);
+the tracer and metrics registry measure where its wall time actually went.
+The comparator turns both into one regression-trackable number plus a
+per-phase share table, emitted into ``BENCH_serve.json`` /
+``BENCH_sched.json``.
+
+Reading the ratio: ``sim_vs_measured = measured_s / predicted_s``. The
+prediction is CIM cycles at ``hw.cim_freq`` on the modeled MARS fabric;
+the measurement is host wall time on whatever backend served the run (CPU
+interpret-mode Pallas in CI), so the ratio is NOT expected to be ~1 - it
+is expected to be FINITE, POSITIVE and STABLE. A drifting ratio means
+either the runtime regressed or the model lies; that drift, not the
+absolute value, is the tracked signal. Per-phase SHARES, by contrast, are
+directly comparable: if the simulator says reload dominates and the trace
+says all-gather does, the model is missing the collective - exactly the
+7x sharded-row diagnosis this exists for.
+
+Heavy imports (perf_model, sched) are deferred into the functions so the
+obs core (trace/metrics) stays dependency-free.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence
+
+
+def _shares(d: Dict[str, float]) -> Dict[str, float]:
+    total = sum(v for v in d.values() if v > 0)
+    if total <= 0:
+        return {k: 0.0 for k in d}
+    return {k: round(max(v, 0.0) / total, 4) for k, v in d.items()}
+
+
+def gap_report(predicted_s: float, measured_s: float,
+               predicted_phases: Optional[Dict[str, float]] = None,
+               measured_phases: Optional[Dict[str, float]] = None,
+               **extra) -> dict:
+    """The first-class gap metric: measured wall time over simulated time.
+
+    ``predicted_phases`` / ``measured_phases`` are per-phase totals in any
+    consistent unit (cycles and seconds respectively are fine) - only
+    their normalized SHARES are reported, which is what makes them
+    comparable across the cycle/wall-clock divide."""
+    if predicted_s <= 0 or not math.isfinite(predicted_s):
+        raise ValueError(f"gap: predicted_s must be finite > 0, got {predicted_s}")
+    if measured_s <= 0 or not math.isfinite(measured_s):
+        raise ValueError(f"gap: measured_s must be finite > 0, got {measured_s}")
+    out = {
+        "predicted_s": predicted_s,
+        "measured_s": measured_s,
+        "sim_vs_measured": round(measured_s / predicted_s, 4),
+        **extra,
+    }
+    if predicted_phases:
+        out["predicted_phase_shares"] = _shares(predicted_phases)
+    if measured_phases:
+        out["measured_phase_shares"] = _shares(measured_phases)
+    return out
+
+
+def measured_phase_shares(snapshot: dict,
+                          metric: str = "serve_phase_s") -> Dict[str, float]:
+    """Per-phase wall-time totals out of a ``MetricsRegistry.snapshot()``:
+    every ``serve_phase_s{phase=X}`` histogram's sum, keyed by X."""
+    out: Dict[str, float] = {}
+    for key, h in snapshot.get("histograms", {}).items():
+        if not key.startswith(metric + "{"):
+            continue
+        labels = key[len(metric) + 1:-1]
+        phase = dict(part.split("=", 1) for part in labels.split(",")).get("phase")
+        if phase is not None:
+            out[phase] = out.get(phase, 0.0) + float(h.get("sum", 0.0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Predictions: decode-step cost from the PR 1 simulator / analytic model
+# ---------------------------------------------------------------------------
+
+
+def predicted_serve_step(cfg, sparsity_gs: float, seq_len: int = 1,
+                         hw=None) -> dict:
+    """Simulated cost of ONE decode step (all CIM projections at
+    ``seq_len`` rows) on the modeled fabric, with the event-driven
+    simulator's per-phase cycle breakdown.
+
+    ``sparsity_gs`` is the zero-group-set fraction of the served packing
+    (the pruning target is the honest proxy when the per-layer profile is
+    not tracked). Returns predicted cycles, seconds at ``hw.cim_freq`` and
+    the reload/compute/fm/stall phase cycles."""
+    from ..core.perf_model import DEFAULT_HW
+    from ..sched import lm_graph, simulate
+
+    hw = hw or DEFAULT_HW
+    graph = lm_graph(cfg, seq_len=seq_len, sparsity_gs=sparsity_gs)
+    sim = simulate(graph, hw=hw, w_bits=cfg.w_bits, a_bits=cfg.a_bits,
+                   keep_events=False)
+    phases = {
+        "compute": sum(l.compute_cycles for l in sim.layers),
+        "reload": sum(l.reload_cycles for l in sim.layers),
+        "fm": sum(l.fm_cycles for l in sim.layers),
+        "stall": sum(l.stall_cycles for l in sim.layers),
+    }
+    return {"cycles": sim.cycles, "predicted_s": sim.cycles / hw.cim_freq,
+            "phases": phases}
+
+
+def serve_gap(cfg, measured_step_s: float, sparsity_gs: float,
+              measured_phases: Optional[Dict[str, float]] = None,
+              hw=None) -> dict:
+    """BENCH_serve's gap row: measured decode-step wall time (fenced, from
+    the instrumented server) against the simulator's predicted one-token
+    step on the modeled fabric."""
+    pred = predicted_serve_step(cfg, sparsity_gs, seq_len=1, hw=hw)
+    return gap_report(
+        pred["predicted_s"], measured_step_s,
+        predicted_phases=pred["phases"], measured_phases=measured_phases,
+        predicted_cycles=round(pred["cycles"], 1),
+        sparsity_gs=sparsity_gs,
+    )
+
+
+def kernel_gap(m: int, k: int, n: int, tile, sparsity: float,
+               w_bits: int = 8, a_bits: int = 8, repeats: int = 3,
+               hw=None) -> dict:
+    """BENCH_sched's gap row: ONE real BSR Pallas dispatch, fenced and
+    timed through the :mod:`repro.kernels.timing` hook, against the
+    analytic model's cycles for the same (m, k) @ (k, n) matmul at the
+    same tile and sparsity.
+
+    This is the CIM-Tuner loop in miniature: the mapping search trusts
+    ``perf_model``; this row records what the searched tile's kernel
+    actually costs on the current backend so the constants can be re-fit
+    (ROADMAP item 4) and regressions in either side show up as ratio
+    drift."""
+    import numpy as np
+
+    from ..core import perf_model as PM
+    from ..core.sparsity import prune_mask_2d
+    from ..kernels import ops
+    from ..kernels.cim_bsr_matmul import bsr_matmul
+    from ..kernels.timing import DispatchTimer
+    import dataclasses as _dc
+    import jax.numpy as jnp
+
+    hw = hw or PM.DEFAULT_HW
+    bk, bn = int(tile[0]), int(tile[1])
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((k, n)).astype(np.float32) * 0.05
+    if sparsity > 0:
+        w = w * np.asarray(prune_mask_2d(jnp.asarray(w), bk, bn, sparsity))
+    p = ops.pack_for_kernel(w, bits=w_bits, bk=bk, bn=bn)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    interp = ops.default_interpret()
+    args = (x, jnp.asarray(p["blocks"]), jnp.asarray(p["scales"]),
+            jnp.asarray(p["row_idx"]), jnp.asarray(p["nnz"]))
+    kw = {"interpret": interp}
+    timer = DispatchTimer(enabled=True)
+    timer.timed("bsr_matmul", (m, k, n), (bk, bn), bsr_matmul, *args, **kw)
+    timer.clear()  # first dispatch is trace+compile, excluded
+    for _ in range(repeats):
+        timer.timed("bsr_matmul", (m, k, n), (bk, bn), bsr_matmul, *args, **kw)
+    measured_s = min(r.seconds for r in timer.records)
+
+    # the analytic model sees the matmul as a 1x1 conv with m output pixels
+    hw_t = _dc.replace(hw, group=bk, alpha=bn)
+    layer = PM.ConvLayer(1, 1, k, n, 1, m, sparsity)
+    perf = PM.evaluate_network([layer], w_bits, a_bits, hw=hw_t)[0]
+    phases = PM.layer_phase_cycles(layer, w_bits, a_bits, hw=hw_t)
+    return gap_report(
+        perf.cycles_mars / hw.cim_freq, measured_s,
+        predicted_phases=phases, predicted_cycles=round(perf.cycles_mars, 1),
+        shape=[m, k, n], tile=[bk, bn], sparsity=sparsity,
+        backend=timer.records[-1].backend,
+    )

@@ -24,6 +24,11 @@
   * ``deployed.save_artifact`` / ``load_artifact`` - offline serving
     artifacts: pack once at compile time, boot without re-packing
     (two-tier artifacts carry the draft packing alongside the target).
+  * ``BatchServer(tracer=..., metrics=...)`` - opt-in observability
+    (:mod:`repro.obs`): fenced phase spans (admit/prefill/gather/dispatch/
+    sample/writeback, spec draft/verify/commit), per-request lifecycle
+    tracks, occupancy gauges and per-(shape, tile, backend) kernel
+    dispatch timing; disabled by default at no-op cost.
 """
 from . import batching, deployed, server, spec, stacked  # noqa: F401
 from .batching import PagedKVCache, Request, RequestQueue  # noqa: F401

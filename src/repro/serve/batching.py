@@ -106,6 +106,7 @@ class Slot:
     out: List[int]
     t_admit: float
     token_times: List[float]
+    queue_wait_s: float = 0.0  # admission minus arrival (TTFT's queue share)
 
     @property
     def done(self) -> bool:

@@ -30,7 +30,9 @@ import numpy as np
 from jax.sharding import Mesh
 
 from ..kernels.cim_bsr_matmul import MACRO_AXIS
+from ..kernels.timing import DispatchTimer
 from ..models.config import ModelConfig
+from ..obs import NULL_METRICS, NULL_TRACER, phase_scope
 from . import deployed, stacked
 from . import spec as spec_mod
 from .batching import PagedKVCache, Request, RequestQueue, Slot, kv_view_spec
@@ -78,6 +80,9 @@ class ServeReport:
     outputs: Dict[str, np.ndarray]
     kv_stats: dict
     spec: Optional[dict] = None  # speculative-decode acceptance telemetry
+    # per-request admission-minus-arrival: the scheduling share of TTFT
+    queue_wait_s: List[float] = dataclasses.field(default_factory=list)
+    metrics: Optional[dict] = None  # obs snapshot (instrumented runs only)
 
     @property
     def tokens_per_s(self) -> float:
@@ -110,8 +115,19 @@ class ServeReport:
             "tpot": {k: round(v, 5) for k, v in _percentiles(self.tpot_s).items()},
             "kv": self.kv_stats,
         }
+        # TTFT = queue wait (scheduling) + service (prefill-to-first-token):
+        # reported separately so load-induced queueing can't masquerade as a
+        # prefill regression (and vice versa)
+        service = [max(t - w, 0.0)
+                   for t, w in zip(self.ttft_s, self.queue_wait_s)]
+        out["queue_wait"] = {k: round(v, 5) for k, v in
+                            _percentiles(self.queue_wait_s).items()}
+        out["ttft_service"] = {k: round(v, 5) for k, v in
+                               _percentiles(service).items()}
         if self.spec is not None:
             out["spec"] = self.spec
+        if self.metrics is not None:
+            out["metrics"] = self.metrics
         return out
 
 
@@ -124,7 +140,8 @@ class BatchServer:
                  continuous: bool = True, mesh: Optional[Mesh] = None,
                  engine: str = "loop",
                  draft: Optional[deployed.ServingParams] = None,
-                 spec: Optional[spec_mod.SpecConfig] = None):
+                 spec: Optional[spec_mod.SpecConfig] = None,
+                 tracer=None, metrics=None):
         """``mesh`` (with a ``macro`` axis) turns on macro-cluster serving:
         pass ``deployed.shard(sp, mesh)`` as ``sp`` so projections run
         tensor-parallel, the gathered KV views are sharded heads-wise, and
@@ -141,7 +158,14 @@ class BatchServer:
         bit-identical greedy tokens; spec additionally requires greedy
         decoding (temperature 0) - with sampling the acceptance rule would
         need distribution-preserving rejection sampling, which this engine
-        does not implement."""
+        does not implement.
+
+        ``tracer`` / ``metrics`` (a :class:`repro.obs.Tracer` /
+        :class:`repro.obs.MetricsRegistry`) opt the loop into phase spans,
+        per-request lifecycle tracks, occupancy gauges and fenced kernel
+        dispatch timing. Default is the shared no-op singletons: every
+        phase boundary fence is gated on them, so the un-instrumented hot
+        path is byte-identical to an uninstrumented server."""
         if cfg.family == "vlm":
             raise NotImplementedError(
                 "BatchServer serves token-only requests; vlm prefill needs "
@@ -210,6 +234,17 @@ class BatchServer:
         # speculative lookahead: a verify writes KV up to pos+k, so
         # worst-case reservation must cover k extra positions per slot
         self._lookahead = self.spec.k if self.spec is not None else 0
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
+        self._obs = bool(self.tracer.recording or self.metrics.recording)
+        # fenced per-(shape, tile, backend) kernel dispatch wall times;
+        # disabled with observability so tracing-off never serializes jax
+        self.timer = DispatchTimer(enabled=self._obs)
+        dep = sp.deployed()
+        self._tile = next(iter(dep.values())).tile if dep else None
+
+    def _phase(self, name: str, **args):
+        return phase_scope(self.tracer, self.metrics, name, **args)
 
     def _sample_row(self, logits: jnp.ndarray, key) -> np.ndarray:
         return np.asarray(sample_tokens(logits, key, self.scfg), np.int32)
@@ -250,10 +285,17 @@ class BatchServer:
                 q.requeue(req)  # backpressure: wait for a drain, keep FIFO
                 return
             key, sub = jax.random.split(key)
-            slots[i] = self._prefill_slot(i, req, kv, sub)
+            slots[i] = self._prefill_slot(
+                i, req, kv, sub,
+                queue_wait=max(0.0, now - max(req.arrival, 0.0)))
 
     def _prefill_slot(self, i: int, req: Request, kv: PagedKVCache,
-                      key) -> Slot:
+                      key, queue_wait: float = 0.0) -> Slot:
+        with self._phase("prefill", rid=req.rid, slot=i):
+            return self._prefill_impl(i, req, kv, key, queue_wait)
+
+    def _prefill_impl(self, i: int, req: Request, kv: PagedKVCache,
+                      key, queue_wait: float) -> Slot:
         bs = self.bcfg.block_size
         tlen = len(req.prompt)
         pad = (-tlen) % bs
@@ -275,7 +317,7 @@ class BatchServer:
         tok = int(self._sample_row(logits, key)[0])
         now = self._now()
         return Slot(req=req, pos=tlen, next_token=tok, out=[tok],
-                    t_admit=now, token_times=[now])
+                    t_admit=now, token_times=[now], queue_wait_s=queue_wait)
 
     # -- main loop -----------------------------------------------------------
 
@@ -295,17 +337,29 @@ class BatchServer:
     def _decode_step(self, slots: List[Optional[Slot]], kv: PagedKVCache,
                      active: List[int], key) -> List[tuple]:
         """One single-token decode over all slots (loop/scan engines).
-        Returns [(slot index, [token]), ...] after committing the KV."""
-        views_k, views_v = self._gather_views(slots, kv, active, 0)
+        Returns [(slot index, [token]), ...] after committing the KV.
+
+        Instrumented phases fence at their boundary (``block_until_ready``
+        / host transfers) so the spans partition the step honestly; with
+        observability off no extra fence runs and dispatch stays async."""
+        with self._phase("step.gather", n_active=len(active)):
+            views_k, views_v = self._gather_views(slots, kv, active, 0)
+            if self._obs:
+                jax.block_until_ready((views_k, views_v))
         pos = np.array([s.pos if s else 0 for s in slots], np.int32)
         toks = np.array([[s.next_token if s else 0] for s in slots],
                         np.int32)
-        logits, k_new, v_new = self._decode(
-            self._params, views_k, views_v, jnp.asarray(pos),
-            jnp.asarray(toks), cfg=self.cfg)
-        pb, off = kv.write_coords([s.pos if s else None for s in slots])
-        kv.write_token(pb, off, k_new, v_new)
-        sampled = self._sample_row(logits, key)
+        with self._phase("step.dispatch", engine=self.engine):
+            logits, k_new, v_new = self.timer.timed(
+                f"decode.{self.engine}",
+                (int(views_k.shape[1]), int(views_k.shape[2])), self._tile,
+                self._decode, self._params, views_k, views_v,
+                jnp.asarray(pos), jnp.asarray(toks), cfg=self.cfg)
+        with self._phase("step.writeback"):
+            pb, off = kv.write_coords([s.pos if s else None for s in slots])
+            kv.write_token(pb, off, k_new, v_new)
+        with self._phase("step.sample"):
+            sampled = self._sample_row(logits, key)
         return [(i, [int(sampled[i])]) for i in active]
 
     def _spec_step(self, slots: List[Optional[Slot]], kv: PagedKVCache,
@@ -328,34 +382,44 @@ class BatchServer:
         toks = np.array([[s.next_token if s else 0] for s in slots],
                         np.int32)
         pos = jnp.asarray(pos_np)
-        dk, dv = self._gather_views(slots, kv, active, k, tier=1)
-        props, d_ks, d_vs = self._draft_propose(
-            self._params.draft, dk, dv, pos, jnp.asarray(toks),
-            cfg=self.cfg, k=k)
-        tk, tv = self._gather_views(slots, kv, active, k, tier=0)
-        ver_toks = jnp.concatenate([jnp.asarray(toks), props], axis=1)
-        logits, t_ks, t_vs = self._verify(self._params.target, tk, tv, pos,
-                                          ver_toks, cfg=self.cfg)
-        # greedy targets for every position of the run (B, k+1)
-        y = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
-        props_np = np.asarray(props)
-        d_ks, d_vs = np.asarray(d_ks), np.asarray(d_vs)
-        t_ks, t_vs = np.asarray(t_ks), np.asarray(t_vs)
-        runs = []
-        for i in active:
-            s = slots[i]
-            a = spec_mod.accept_greedy(props_np[i], y[i, :k])
-            emitted = [int(t) for t in y[i, : a + 1]]
-            # cap at the request budget and cut at EOS - exactly where
-            # sequential decode would have stopped emitting
-            emitted = emitted[: s.req.max_new_tokens - len(s.out)]
-            if self.scfg.eos_id >= 0 and self.scfg.eos_id in emitted:
-                emitted = emitted[: emitted.index(self.scfg.eos_id) + 1]
-            e = len(emitted)
-            kv.write_run(i, s.pos, t_ks[:, i, :e], t_vs[:, i, :e], tier=0)
-            kv.write_run(i, s.pos, d_ks[:, i, :e], d_vs[:, i, :e], tier=1)
-            self._spec_stats.record(n_accepted=min(a, e - 1), n_emitted=e)
-            runs.append((i, emitted))
+        with self._phase("spec.draft", k=k, n_active=len(active)):
+            dk, dv = self._gather_views(slots, kv, active, k, tier=1)
+            props, d_ks, d_vs = self._draft_propose(
+                self._params.draft, dk, dv, pos, jnp.asarray(toks),
+                cfg=self.cfg, k=k)
+            # fencing props is ~free (the verify consumes them immediately)
+            # and makes the draft/verify wall-time split honest
+            props = jax.block_until_ready(props)
+        t_draft = time.monotonic()
+        with self._phase("spec.verify", k=k, n_active=len(active)):
+            tk, tv = self._gather_views(slots, kv, active, k, tier=0)
+            ver_toks = jnp.concatenate([jnp.asarray(toks), props], axis=1)
+            logits, t_ks, t_vs = self._verify(self._params.target, tk, tv,
+                                              pos, ver_toks, cfg=self.cfg)
+            # greedy targets for every position of the run (B, k+1)
+            y = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        t_verify = time.monotonic()
+        with self._phase("spec.commit"):
+            props_np = np.asarray(props)
+            d_ks, d_vs = np.asarray(d_ks), np.asarray(d_vs)
+            t_ks, t_vs = np.asarray(t_ks), np.asarray(t_vs)
+            runs = []
+            for i in active:
+                s = slots[i]
+                a = spec_mod.accept_greedy(props_np[i], y[i, :k])
+                emitted = [int(t) for t in y[i, : a + 1]]
+                # cap at the request budget and cut at EOS - exactly where
+                # sequential decode would have stopped emitting
+                emitted = emitted[: s.req.max_new_tokens - len(s.out)]
+                if self.scfg.eos_id >= 0 and self.scfg.eos_id in emitted:
+                    emitted = emitted[: emitted.index(self.scfg.eos_id) + 1]
+                e = len(emitted)
+                kv.write_run(i, s.pos, t_ks[:, i, :e], t_vs[:, i, :e], tier=0)
+                kv.write_run(i, s.pos, d_ks[:, i, :e], d_vs[:, i, :e], tier=1)
+                self._spec_stats.record(n_accepted=min(a, e - 1), n_emitted=e)
+                runs.append((i, emitted))
+        self._spec_stats.draft_s.append(t_draft - t_round)
+        self._spec_stats.verify_s.append(t_verify - t_draft)
         self._spec_stats.round_s.append(time.monotonic() - t_round)
         return runs
 
@@ -369,6 +433,7 @@ class BatchServer:
         outputs: Dict[str, np.ndarray] = {}
         ttft: List[float] = []
         tpot: List[float] = []
+        queue_wait: List[float] = []
         key = jax.random.PRNGKey(scfg.seed)
         n_steps = 0
         self._spec_stats = (spec_mod.SpecStats(self.spec.k,
@@ -380,13 +445,30 @@ class BatchServer:
             s = slots[i]
             outputs[s.req.rid] = np.asarray(s.out, np.int32)
             ttft.append(s.token_times[0] - max(s.req.arrival, 0.0))
+            queue_wait.append(s.queue_wait_s)
             tpot.extend(np.diff(s.token_times).tolist())
+            if self.tracer.recording:
+                # retroactive lifecycle spans: queued -> served, on a queue
+                # track plus the slot's own track (slots serialize requests,
+                # so per-track spans never overlap). Slot clocks are
+                # t0-relative; the tracer wants epoch-relative seconds.
+                off = self._t0 - self.tracer.epoch
+                arr = max(s.req.arrival, 0.0)
+                self.tracer.complete(
+                    f"queued:{s.req.rid}", off + arr,
+                    off + arr + s.queue_wait_s, track="queue", rid=s.req.rid)
+                self.tracer.complete(
+                    f"req:{s.req.rid}", off + s.t_admit,
+                    off + s.token_times[-1], track=f"slot{i}",
+                    rid=s.req.rid, tokens=len(s.out))
+            self.metrics.counter("requests_finished").inc()
             kv.free_slot(i)
             slots[i] = None
 
         while len(q) or any(s is not None for s in slots):
             key, k_adm, k_dec = jax.random.split(key, 3)
-            self._admit(q, slots, kv, self._now(), k_adm)
+            with self._phase("step.admit"):
+                self._admit(q, slots, kv, self._now(), k_adm)
             # a request may be done straight out of prefill (max_new=1/EOS)
             for i, s in enumerate(slots):
                 if s is not None and (s.done or s.next_token == scfg.eos_id):
@@ -400,11 +482,22 @@ class BatchServer:
                         time.sleep(min(wait, bcfg.idle_wait_s))
                 continue
 
-            if self.spec is not None:
-                runs = self._spec_step(slots, kv, active)
-            else:
-                runs = self._decode_step(slots, kv, active, k_dec)
+            with self._phase("decode_step", step=n_steps,
+                             engine=self.engine, n_active=len(active)):
+                if self.spec is not None:
+                    runs = self._spec_step(slots, kv, active)
+                else:
+                    runs = self._decode_step(slots, kv, active, k_dec)
             n_steps += 1
+            if self._obs:
+                in_use = kv.blocks_in_use
+                self.metrics.gauge("slots_active").set(len(active))
+                self.metrics.gauge("kv_blocks_in_use").set(in_use)
+                self.metrics.gauge("kv_utilization").set(
+                    in_use / kv.n_blocks)
+                self.metrics.counter("decode_steps").inc()
+                self.tracer.counter("serve", slots_active=len(active),
+                                    kv_blocks_in_use=in_use)
             now = self._now()
             for i, toks in runs:
                 s = slots[i]
@@ -420,12 +513,19 @@ class BatchServer:
         total = sum(len(o) for o in outputs.values())
         stats = kv.stats()
         stats["n_devices"] = self.n_devices
+        snap = None
+        if self._obs:
+            snap = self.metrics.snapshot() or None
+            disp = self.timer.summary()
+            if disp and snap is not None:
+                snap["kernel_dispatch"] = disp
         rep = ServeReport(
             n_requests=len(outputs), total_tokens=total, wall_s=wall,
             n_decode_steps=n_steps, ttft_s=ttft, tpot_s=tpot,
             outputs=outputs, kv_stats=stats,
             spec=(self._spec_stats.to_json()
                   if self._spec_stats is not None else None),
+            queue_wait_s=queue_wait, metrics=snap,
         )
         rep._n_slots = bcfg.n_slots
         return rep

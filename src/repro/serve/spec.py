@@ -255,6 +255,12 @@ class SpecStats:
     accepted: int = 0
     emitted: int = 0
     round_s: list = dataclasses.field(default_factory=list)
+    # per-round sub-phases: draft_s covers the draft-tier gather + k-token
+    # propose (fenced on the proposals), verify_s the target gather + one
+    # multi-token verify + argmax transfer; round_s additionally includes
+    # the host-side accept/commit tail
+    draft_s: list = dataclasses.field(default_factory=list)
+    verify_s: list = dataclasses.field(default_factory=list)
 
     def record(self, n_accepted: int, n_emitted: int) -> None:
         self.slot_rounds += 1
@@ -278,7 +284,7 @@ class SpecStats:
     def to_json(self) -> dict:
         per_tok = (self.round_p50_s / max(self.tokens_per_verify, 1e-9)
                    if self.round_s else 0.0)
-        return {
+        out = {
             "k": self.k,
             "draft_sparsity": self.draft_sparsity,
             "n_rounds": len(self.round_s),  # batched draft+verify rounds
@@ -290,3 +296,14 @@ class SpecStats:
             "round_p50_ms": round(self.round_p50_s * 1e3, 3),
             "ms_per_token_p50": round(per_tok * 1e3, 3),
         }
+        if self.draft_s:
+            d50 = float(np.percentile(self.draft_s, 50))
+            v50 = float(np.percentile(self.verify_s, 50))
+            out.update({
+                "draft_p50_ms": round(d50 * 1e3, 3),
+                "verify_p50_ms": round(v50 * 1e3, 3),
+                # share of the round spent drafting - the quantity the
+                # speculative_summary cost model predicts from c_draft/c_verify
+                "draft_share": round(d50 / max(d50 + v50, 1e-12), 4),
+            })
+        return out
