@@ -15,6 +15,15 @@ the otherwise purely modeled numbers. The ratio compares CIM cycles to the
 host backend's wall clock, so its value is not ~1; finiteness and
 stability are the tracked contract.
 
+On top of that one-shot anchor, the observe->tune loop runs per entry: the
+top-``TOP_N`` searched tiles are each timed through the real stacked BSR
+kernels (``sched.autotune.measure_tile`` at a representative matmul shape)
+and the measured winner lands in ``measured_tile`` - by construction its
+fenced wall clock is <= the simulated pick's, which is asserted. The
+per-sample timings re-fit the cycle constants
+(``perf_model.fit_cycle_constants``) and the entry's
+``sim_vs_measured.post_refit`` carries the post-refit gap + residual.
+
 Results are also written to ``BENCH_sched.json`` at the repo root.
 """
 from __future__ import annotations
@@ -27,6 +36,7 @@ import numpy as np
 from repro.core import perf_model as PM
 from repro.obs import gap as obs_gap
 from repro import sched
+from repro.sched import autotune as AT
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sched.json")
 
@@ -35,11 +45,16 @@ NETWORKS = [
     ("resnet18", PM.resnet18_cifar_layers, sched.resnet18_graph),
 ]
 
+TOP_N = 3  # searched tiles measured per entry
+# representative matmul workload the tiles are timed on (d_in, d_out, count)
+MEASURE_SHAPES = [(128, 128, 1)]
+
 
 def run():
     rows = []
     report = {}
     gap_cache = {}  # one fenced dispatch per distinct (tile, w, a, sparsity)
+    measure_cache = {}  # one measure_tile row per distinct (tile, w, a, spars)
     for net, layers_fn, graph_fn in NETWORKS:
         graph = graph_fn()
         for (w, a) in [(8, 4), (8, 8)]:
@@ -51,24 +66,66 @@ def run():
             schedule = sched.schedule_from_search(graph, search, w_bits=w,
                                                   a_bits=a)
             key = f"{net}_w{w}a{a}"
+            tile = tuple(search.best.candidate.tile)
+            spars = round(float(np.mean([l.sparsity_gs
+                                         for l in layers_fn()])), 3)
+
+            # observe->tune: fenced wall clock over the top-N searched tiles
+            shortlist, seen = [], set()
+            for r in sorted(search.table, key=lambda r: r.fps, reverse=True):
+                if r.candidate.tile not in seen:
+                    seen.add(r.candidate.tile)
+                    shortlist.append(r.candidate.tile)
+                if len(shortlist) >= TOP_N:
+                    break
+            measured = {}
+            for t in shortlist:
+                mk = (t, w, a, spars)
+                if mk not in measure_cache:
+                    measure_cache[mk] = AT.measure_tile(
+                        MEASURE_SHAPES, t, spars, w_bits=w, a_bits=a,
+                        repeats=2, stack_layers=2)
+                measured[t] = measure_cache[mk]
+            best_tile = min(measured, key=lambda t: measured[t]["total_s"])
+            # the simulated pick is always in the shortlist, so the measured
+            # winner can never clock slower on the timed workload
+            assert measured[best_tile]["total_s"] <= measured[tile]["total_s"]
+            schedule.measured_tile = best_tile
+
+            # cost-constant re-fit over every sample this entry measured
+            refit = AT.refit_from_table(list(measured.values()))
+            best_samples = measured[best_tile]["samples"]
+            meas_total = sum(s["measured_s"] for s in best_samples)
+            pred_total = sum(refit.predict_seconds(s["phases"])
+                             for s in best_samples)
+
             entry = {
                 "fps_analytic": round(analytic.fps, 1),
                 "fps_sim": round(sim.fps, 1),
                 "fps_searched": round(search.best.fps, 1),
                 "dense_sim_vs_analytic": round(cv["ratio"], 3),
-                "searched_tile": list(search.best.candidate.tile),
+                "searched_tile": list(tile),
+                "measured_tile": list(best_tile),
                 "search_speedup": round(search.speedup_vs_default, 3),
                 "core_utilization": round(sim.core_utilization, 3),
                 "schedule": schedule.to_json(),
             }
-            tile = tuple(search.best.candidate.tile)
-            spars = round(float(np.mean([l.sparsity_gs
-                                         for l in layers_fn()])), 3)
             gk = (tile, w, a, spars)
             if gk not in gap_cache:
                 gap_cache[gk] = obs_gap.kernel_gap(
                     32, 128, 128, tile, spars, w_bits=w, a_bits=a)
-            entry["sim_vs_measured"] = gap_cache[gk]
+            entry["sim_vs_measured"] = dict(gap_cache[gk])
+            entry["sim_vs_measured"]["post_refit"] = {
+                "gap": round(meas_total / max(pred_total, 1e-18), 4),
+                "residual": round(refit.residual, 4),
+                "n_samples": refit.n_samples,
+                "seconds_per_cycle": {k: float(f"{v:.6g}") for k, v in
+                                      refit.seconds_per_cycle.items()},
+                "measured_tile_wall_s": round(meas_total, 6),
+                "sim_tile_wall_s": round(
+                    sum(s["measured_s"]
+                        for s in measured[tile]["samples"]), 6),
+            }
             report[key] = entry
             rows.append({
                 "name": f"sched_{key}",
@@ -78,8 +135,11 @@ def run():
                 "dense_ratio": entry["dense_sim_vs_analytic"],
                 "tile": f"{search.best.candidate.group}x"
                         f"{search.best.candidate.alpha}",
+                "measured_tile": f"{best_tile[0]}x{best_tile[1]}",
                 "util": entry["core_utilization"],
                 "gap": entry["sim_vs_measured"]["sim_vs_measured"],
+                "gap_post_refit":
+                    entry["sim_vs_measured"]["post_refit"]["gap"],
             })
     with open(os.path.abspath(OUT_PATH), "w") as f:
         json.dump(report, f, indent=1)

@@ -37,6 +37,9 @@ percentiles (queue wait split out of TTFT), plus a ``sim_vs_measured``
 row from a separate ``repro.obs``-instrumented scan run: fenced
 decode-step p50 against the event-driven simulator's one-token step on
 the modeled CIM fabric (the ratio's drift, not its value, is the signal).
+The sharded row carries its own ``sim_vs_measured`` against the
+all-gather-aware prediction (``serve_gap(..., n_devices=4)``), so the
+collective's modeled share is confronted with the measured step cost.
 
 Packings are cached as serving artifacts under one shared directory
 (``MARS_BENCH_ARTIFACTS``, default ``/tmp/mars-bench-artifacts``): the
@@ -273,8 +276,12 @@ def run():
            metrics=gap_metrics)
     snap = gap_metrics.snapshot()
     step_h = snap["histograms"].get("serve_phase_s{phase=decode_step}", {})
+    # empty phase table (instrumentation regressed / zero decode steps):
+    # fall back to the fenced tpot p50 rather than feeding 0.0 into the gap
+    step_p50 = (float(step_h["p50"]) if step_h.get("count")
+                else float(scan_rep.to_json()["tpot"]["p50"]))
     sim_gap = obs_gap.serve_gap(
-        cfg, float(step_h["p50"]), TARGET_SPARSITY,
+        cfg, step_p50, TARGET_SPARSITY,
         measured_phases={k: v for k, v in
                          obs_gap.measured_phase_shares(snap).items()
                          if k.startswith("step.")})
@@ -287,6 +294,13 @@ def run():
         "spec": spec_rep,
     }
     sharded = _sharded_report()
+    # sharded gap: the all-gather-aware prediction (perf_model's ring
+    # collective at every column-sharded projection) against the sharded
+    # run's fenced tpot p50 - the measured anchor for the 7x sharded
+    # regression ROADMAP tracks
+    sharded["sim_vs_measured"] = obs_gap.serve_gap(
+        cfg, float(sharded["tpot"]["p50"]), TARGET_SPARSITY,
+        n_devices=SHARD_DEVICES)
     loop_vs_scan = {
         # per-decode-step latency: all slots advance one token per step,
         # so tpot is the step cost; the scan runtime compiles the layer
@@ -362,6 +376,16 @@ def run():
         "gap": sim_gap["sim_vs_measured"],
         "predicted_us": round(sim_gap["predicted_s"] * 1e6, 2),
         "measured_us": round(sim_gap["measured_s"] * 1e6, 2),
+    })
+    sharded_gap = sharded["sim_vs_measured"]
+    rows.append({
+        "name": "serve_sharded_sim_vs_measured",
+        "gap": sharded_gap["sim_vs_measured"],
+        "n_devices": SHARD_DEVICES,
+        "collective_share": sharded_gap["predicted_phase_shares"].get(
+            "collective", 0.0),
+        "predicted_us": round(sharded_gap["predicted_s"] * 1e6, 2),
+        "measured_us": round(sharded_gap["measured_s"] * 1e6, 2),
     })
     rows.append({
         "name": "serve_continuous_speedup",

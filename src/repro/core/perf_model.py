@@ -25,7 +25,7 @@ NNZ = all group-sets and full weight storage.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -61,6 +61,11 @@ class HardwareConfig:
     ctrl_overhead: float = CTRL_OVERHEAD
     pass_overlap: float = PASS_OVERLAP
     macro_power_w: float = MACRO_POWER_W
+    # Macro-mesh interconnect (serving path): ring all-gather at every
+    # column-sharded projection boundary. Calibration knobs, not silicon:
+    # bytes one device moves per CIM cycle and the per-hop launch latency.
+    interconnect_bytes_per_cycle: float = 64.0
+    collective_latency_cycles: float = 400.0
 
     @property
     def n_macros(self) -> int:
@@ -86,6 +91,15 @@ class HardwareConfig:
         g = self.group if group is None else group
         a = self.alpha if alpha is None else alpha
         return groupsets * g * a * w_bits / self.reload_bits_per_cycle
+
+    def allgather_cycles(self, n_bytes: float, n_devices: int) -> float:
+        """Ring all-gather cost: each device ships its 1/n shard around the
+        ring in (n-1) hops, each hop paying launch latency + wire time."""
+        if n_devices <= 1 or n_bytes <= 0:
+            return 0.0
+        chunk = n_bytes / n_devices
+        per_hop = chunk / self.interconnect_bytes_per_cycle
+        return (n_devices - 1) * (per_hop + self.collective_latency_cycles)
 
 
 DEFAULT_HW = HardwareConfig()
@@ -261,6 +275,111 @@ def summarize(layers: Sequence[ConvLayer], w_bits: int = 8, a_bits: int = 4,
     best_density = min(max(1e-3, 1.0 - l.sparsity_gs) for l in layers)
     peak = peak_dense_ops / best_density / (hw.n_macros * hw.macro_power_w) / 1e12
     return NetworkPerf(fps, fps_dense, cyc_d / cyc_m, avg_gops, macro_tops_w, peak, perf)
+
+
+# ---------------------------------------------------------------------------
+# Cost-constant re-fit: least-squares calibration against measured timings
+# ---------------------------------------------------------------------------
+
+# Per-phase cost coefficients the re-fit solves for, in order: seconds per
+# MAC-path cycle (the max(compute, fm) critical path), per reload cycle, and
+# per control cycle.
+REFIT_COEFFS = ("mac", "reload", "ctrl")
+
+
+def phase_features(phases: Dict[str, float]) -> List[float]:
+    """Cycle-count feature vector of one measured sample, matching
+    REFIT_COEFFS: the model says seconds = features . theta."""
+    compute = float(phases.get("compute", 0.0))
+    fm = float(phases.get("fm", 0.0))
+    return [max(compute, fm), float(phases.get("reload", 0.0)),
+            float(phases.get("ctrl", 0.0))]
+
+
+@dataclasses.dataclass(frozen=True)
+class RefitResult:
+    """Outcome of ``fit_cycle_constants``.
+
+    ``hw`` is the input HardwareConfig with cim_freq, reload_bits_per_cycle
+    and ctrl_overhead re-derived so the analytic model reproduces the fitted
+    seconds-per-cycle coefficients exactly; ``residual`` is the relative RMS
+    error of the fit over its own samples - the post-refit gap floor."""
+
+    hw: HardwareConfig
+    seconds_per_cycle: Dict[str, float]
+    residual: float
+    n_samples: int
+
+    def predict_seconds(self, phases: Dict[str, float]) -> float:
+        f = phase_features(phases)
+        return sum(c * t for c, t in zip(f, (
+            self.seconds_per_cycle[k] for k in REFIT_COEFFS)))
+
+    def to_json(self) -> dict:
+        return {"seconds_per_cycle": dict(self.seconds_per_cycle),
+                "residual": self.residual, "n_samples": self.n_samples,
+                "cim_freq": self.hw.cim_freq,
+                "reload_bits_per_cycle": self.hw.reload_bits_per_cycle,
+                "ctrl_overhead": self.hw.ctrl_overhead}
+
+
+def _uniform_scale_fit(A: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Degenerate fallback: one scale factor applied to every phase."""
+    denom = float(A.sum())
+    scale = float(y.sum()) / denom if denom > 0 else 1.0 / CIM_FREQ
+    return np.full(A.shape[1], max(scale, 1e-18))
+
+
+def fit_cycle_constants(samples: Sequence[Tuple[Dict[str, float], float]],
+                        hw: HardwareConfig = DEFAULT_HW) -> RefitResult:
+    """Least-squares re-fit of the cycle constants from measured timings.
+
+    ``samples`` pairs a ``layer_phase_cycles``-style phase dict with the
+    measured wall-clock seconds of that workload on the machine at hand.
+    Solves ``seconds = max(compute, fm) * t_mac + reload * t_reload +
+    ctrl * t_ctrl`` for nonnegative thetas; with fewer than 3 usable
+    samples, or a singular/degenerate system, falls back to a single
+    uniform scale factor so the result is always well-defined."""
+    rows = [(phase_features(p), float(m)) for p, m in samples
+            if np.isfinite(float(m)) and float(m) > 0
+            and all(np.isfinite(v) and v >= 0 for v in phase_features(p))]
+    if not rows:
+        raise ValueError("fit_cycle_constants: no finite positive samples")
+    A = np.asarray([f for f, _ in rows], dtype=np.float64)
+    y = np.asarray([m for _, m in rows], dtype=np.float64)
+
+    theta = None
+    if len(rows) >= 3:
+        active = [j for j in range(A.shape[1]) if A[:, j].max() > 0]
+        # Nonnegative fit by iterative clamping: drop any coefficient the
+        # unconstrained solve drives negative and re-solve the rest.
+        while active:
+            sol, *_ = np.linalg.lstsq(A[:, active], y, rcond=None)
+            neg = [active[i] for i, c in enumerate(sol) if c < 0]
+            if not neg:
+                theta = np.zeros(A.shape[1])
+                for i, j in enumerate(active):
+                    theta[j] = sol[i]
+                break
+            active = [j for j in active if j not in neg]
+    if theta is None or theta[0] <= 0:
+        theta = _uniform_scale_fit(A, y)
+
+    pred = A @ theta
+    residual = float(np.sqrt(np.mean((pred - y) ** 2)) / max(y.mean(), 1e-18))
+    t_mac, t_reload, t_ctrl = (float(t) for t in theta)
+    # Fold the coefficients back into a HardwareConfig: cycles/cim_freq must
+    # equal cycles * theta per phase, so frequency absorbs t_mac and the
+    # other two constants are rescaled relative to it.
+    hw_fit = dataclasses.replace(
+        hw,
+        cim_freq=1.0 / t_mac,
+        reload_bits_per_cycle=(hw.reload_bits_per_cycle * t_mac / t_reload
+                               if t_reload > 0 else hw.reload_bits_per_cycle),
+        ctrl_overhead=hw.ctrl_overhead * t_ctrl / t_mac,
+    )
+    coeffs = dict(zip(REFIT_COEFFS, (t_mac, t_reload, t_ctrl)))
+    return RefitResult(hw_fit, coeffs, residual, len(rows))
 
 
 # ---------------------------------------------------------------------------

@@ -41,11 +41,24 @@ class DispatchRecord:
         return (self.name, self.shape, self.tile, self.backend)
 
 
-class DispatchTimer:
-    """Thread-safe fenced wall-time recorder for kernel dispatches."""
+def _dim_label(dims: Optional[tuple]) -> str:
+    """``(16, 16)`` -> ``"16x16"``; None -> ``"none"`` (metric label form)."""
+    if dims is None:
+        return "none"
+    return "x".join(str(int(d)) for d in dims)
 
-    def __init__(self, enabled: bool = True):
+
+class DispatchTimer:
+    """Thread-safe fenced wall-time recorder for kernel dispatches.
+
+    When constructed with a recording ``repro.obs.metrics`` registry, every
+    record is also observed into the ``kernel_dispatch_s`` histogram labeled
+    (name, shape, tile, backend) - the ServeReport metrics snapshot then
+    carries per-dispatch p50/p99 without a side table."""
+
+    def __init__(self, enabled: bool = True, metrics=None):
         self.enabled = enabled
+        self.metrics = metrics
         self._lock = threading.Lock()
         self.records: List[DispatchRecord] = []
 
@@ -58,6 +71,13 @@ class DispatchTimer:
             float(seconds))
         with self._lock:
             self.records.append(rec)
+        if self.metrics is not None and getattr(self.metrics, "recording", False):
+            # label key is ``kernel`` (not ``name``): the registry's
+            # instrument name is the positional ``name`` argument
+            self.metrics.histogram(
+                "kernel_dispatch_s", kernel=rec.name,
+                shape=_dim_label(rec.shape), tile=_dim_label(rec.tile),
+                backend=rec.backend).observe(rec.seconds)
 
     def timed(self, name: str, shape, tile, fn, *args, **kw):
         """Call ``fn(*args, **kw)``; when enabled, fence every output with

@@ -160,6 +160,58 @@ def _parse_spec(arg, cfg, target_sparsity):
         raise SystemExit(f"--spec: {e}") from None
 
 
+def _run_autotune(args, cfg):
+    """Measured-latency tile pick for a fresh pack: shortlist the top-N
+    simulated tiles, time each through the real stacked BSR kernels, return
+    (AutotuneResult, AutotuneCache) - the cache is persisted into the
+    artifact manifest so later boots reuse the measurement."""
+    from ..sched import autotune as AT
+
+    cache = AT.AutotuneCache()
+    res = AT.autotune(cfg, top_n=args.autotune,
+                      target_sparsity=args.target_sparsity, cache=cache)
+    bk, bn = res.best_tile
+    sbk, sbn = res.simulated_tile
+    print(f"autotune: measured tile {bk}x{bn} over {len(res.table)} "
+          f"candidate(s) on {res.backend} (simulated pick {sbk}x{sbn})")
+    for row in res.table:
+        print(f"autotune:   tile {row['tile'][0]}x{row['tile'][1]} "
+              f"total {row['total_s'] * 1e3:.2f} ms "
+              f"(prefill {row['prefill_s'] * 1e3:.2f}, "
+              f"decode {row['decode_s'] * 1e3:.2f}; "
+              f"sim {row['sim_fps']} fps)")
+    return res, cache
+
+
+def _report_artifact_autotune(cfg, meta):
+    """Boot-path cache report: the stored packing is served either way
+    (artifacts are immutable); this only says whether the stored autotune
+    measurement covers THIS (arch, shapes, backend)."""
+    from ..sched import autotune as AT
+
+    stored = meta.get("autotune")
+    if not stored:
+        print("autotune: artifact carries no autotune cache - serving "
+              "stored packing unchanged (re-pack with --autotune to tune)")
+        return
+    try:
+        cache = AT.AutotuneCache.from_json(stored)
+    except ValueError as e:
+        print(f"autotune: stored cache unusable ({e}) - serving stored "
+              "packing unchanged")
+        return
+    hit = cache.get(AT.autotune_key(cfg))
+    if hit is None:
+        print("autotune: cache MISS for this (arch, shapes, backend) - the "
+              "stored packing was tuned elsewhere; serving as stored "
+              "(point --artifact at a fresh directory to re-tune here)")
+    else:
+        bt = hit["best_tile"]
+        print(f"autotune: cache hit ({bt[0]}x{bt[1]}, measured on "
+              f"{hit.get('backend')}) - boot reuses the measurement, "
+              "no re-timing")
+
+
 def _serving_params(args, cfg, params, spec_cfg=None):
     """Build (or boot) the serving weights: the artifact flow runs the
     full search+quantize+prune+pack pipeline ONCE and later boots skip
@@ -189,6 +241,8 @@ def _serving_params(args, cfg, params, spec_cfg=None):
                       "(packing flags only apply when building)")
             print(f"artifact: loaded {args.artifact} "
                   f"(arch={meta.get('arch')}, no re-packing)")
+            if args.autotune > 0:
+                _report_artifact_autotune(cfg, meta)
             if spec_cfg is None:
                 return sp, None, None
             if draft is not None:
@@ -213,18 +267,26 @@ def _serving_params(args, cfg, params, spec_cfg=None):
             print(f"artifact: upgraded to two-tier (draft packed at "
                   f"sparsity {spec_cfg.draft_sparsity}) at {out}")
             return sp, draft, spec_cfg
+    at_result = at_cache = None
+    tile = _parse_tile(args.tile)
+    if args.compressed and args.autotune > 0 and tile is None:
+        at_result, at_cache = _run_autotune(args, cfg)
+        tile = at_result.best_tile
     sp = (deployed.compress(cfg, params, target_sparsity=args.target_sparsity,
-                            schedule=(None if args.tile else
+                            schedule=(None if tile else
                                       deployed.default_schedule(cfg)),
-                            tile=_parse_tile(args.tile))
+                            tile=tile, uniform=at_result is not None)
           if args.compressed else deployed.from_params(cfg, params))
     if spec_cfg is not None:
         draft = spec_mod.draft_serving(cfg, sp, spec_cfg.draft_sparsity,
-                                       tile=_parse_tile(args.tile))
+                                       tile=tile)
     if args.artifact:
         extra = {"compressed": args.compressed}
         if draft is not None:
             extra["draft_sparsity"] = spec_cfg.draft_sparsity
+        if at_result is not None:
+            extra["autotune"] = at_cache.to_json()
+            extra["autotune_tile"] = list(at_result.best_tile)
         out = deployed.save_artifact(args.artifact, sp, cfg, draft=draft,
                                      extra=extra)
         print(f"artifact: packed + saved to {out}")
@@ -338,6 +400,13 @@ def main(argv=None):
     ap.add_argument("--tile", default="",
                     help="BKxBN packing tile override (e.g. 16x16); default "
                     "is the searched schedule's tile")
+    ap.add_argument("--autotune", type=int, default=0, metavar="TOPN",
+                    help="with --compressed: time the top-TOPN simulated "
+                    "tiles through the real stacked BSR kernels (fenced) "
+                    "and pack with the measured winner; the measurement is "
+                    "cached in the artifact manifest keyed by (arch, "
+                    "shapes, backend). 0 = trust the simulator (default). "
+                    "Ignored when --tile pins the tile explicitly")
     ap.add_argument("--trace-out", default="",
                     help="write a Chrome trace-event JSON of the measured "
                     "run (phase spans, request lifecycle tracks, occupancy "

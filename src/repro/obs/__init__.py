@@ -10,7 +10,10 @@ Three dependency-free cores:
   * :mod:`gap` - the CIMinus/CIM-Tuner loop: measured per-phase timings
     confronted with ``core.perf_model`` / the ``repro.sched`` simulator's
     predictions, emitting the ``sim_vs_measured`` ratio the benchmarks
-    regression-track.
+    regression-track;
+  * :mod:`history` - append-only JSONL bench history keyed by (git sha,
+    backend, arch) with the tolerance-band regression gate CI runs
+    (``python -m repro.obs.history``).
 
 Everything is disabled-by-default at near-zero cost: :data:`NULL_TRACER`
 and :data:`NULL_METRICS` are shared no-op singletons (zero allocation on
@@ -22,7 +25,7 @@ from __future__ import annotations
 
 import time
 
-from . import gap, metrics, trace  # noqa: F401
+from . import gap, history, metrics, trace  # noqa: F401
 from .metrics import (MetricsRegistry, NullMetricsRegistry,  # noqa: F401
                       NULL_METRICS, validate_metrics_snapshot)
 from .trace import (NullTracer, NULL_TRACER, Tracer,  # noqa: F401
@@ -64,7 +67,7 @@ def phase_scope(tracer, metrics_reg, name: str, **args):
 __all__ = [
     "MetricsRegistry", "NullMetricsRegistry", "NULL_METRICS",
     "NullTracer", "NULL_TRACER", "Tracer",
-    "gap", "metrics", "phase_scope", "trace",
+    "gap", "history", "metrics", "phase_scope", "trace",
     "validate_chrome_trace", "validate_chrome_trace_file",
     "validate_metrics_snapshot",
 ]

@@ -30,11 +30,34 @@ import math
 from typing import Dict, Optional, Sequence
 
 
+# Floor for fenced wall-clock samples: a coarse monotonic clock can return
+# an exact 0.0 for a sub-resolution dispatch; clamping (instead of dividing)
+# keeps gap rows finite without hiding that the sample was degenerate.
+MIN_MEASURED_S = 1e-9
+
+
 def _shares(d: Dict[str, float]) -> Dict[str, float]:
-    total = sum(v for v in d.values() if v > 0)
+    """Normalize phase totals to shares, dropping non-finite entries (an
+    inf phase would turn every share into NaN via inf/inf)."""
+    clean = {k: v for k, v in d.items()
+             if isinstance(v, (int, float)) and math.isfinite(v)}
+    total = sum(v for v in clean.values() if v > 0)
     if total <= 0:
-        return {k: 0.0 for k in d}
-    return {k: round(max(v, 0.0) / total, 4) for k, v in d.items()}
+        return {k: 0.0 for k in clean}
+    return {k: round(max(v, 0.0) / total, 4) for k, v in clean.items()}
+
+
+def clamp_measured(samples: Sequence[float]) -> float:
+    """Min over finite positive fenced samples, floored at
+    :data:`MIN_MEASURED_S`. Raises ``ValueError`` when every sample is
+    non-finite or negative (an empty/broken measurement table) - the loud
+    failure belongs here, not as an inf ratio in a bench row."""
+    usable = [float(s) for s in samples if math.isfinite(float(s)) and s >= 0]
+    if not usable:
+        raise ValueError(
+            f"gap: no usable measured samples in {list(samples)!r} "
+            "(empty phase table or non-finite timings)")
+    return max(min(usable), MIN_MEASURED_S)
 
 
 def gap_report(predicted_s: float, measured_s: float,
@@ -70,12 +93,19 @@ def measured_phase_shares(snapshot: dict,
     every ``serve_phase_s{phase=X}`` histogram's sum, keyed by X."""
     out: Dict[str, float] = {}
     for key, h in snapshot.get("histograms", {}).items():
-        if not key.startswith(metric + "{"):
+        if not key.startswith(metric + "{") or not isinstance(h, dict):
             continue
         labels = key[len(metric) + 1:-1]
-        phase = dict(part.split("=", 1) for part in labels.split(",")).get("phase")
-        if phase is not None:
-            out[phase] = out.get(phase, 0.0) + float(h.get("sum", 0.0))
+        phase = dict(part.split("=", 1) for part in labels.split(",")
+                     if "=" in part).get("phase")
+        if phase is None:
+            continue
+        try:
+            total = float(h.get("sum", 0.0))
+        except (TypeError, ValueError):
+            continue
+        if math.isfinite(total):
+            out[phase] = out.get(phase, 0.0) + total
     return out
 
 
@@ -85,15 +115,20 @@ def measured_phase_shares(snapshot: dict,
 
 
 def predicted_serve_step(cfg, sparsity_gs: float, seq_len: int = 1,
-                         hw=None) -> dict:
+                         hw=None, n_devices: int = 1) -> dict:
     """Simulated cost of ONE decode step (all CIM projections at
     ``seq_len`` rows) on the modeled fabric, with the event-driven
     simulator's per-phase cycle breakdown.
 
     ``sparsity_gs`` is the zero-group-set fraction of the served packing
     (the pruning target is the honest proxy when the per-layer profile is
-    not tracked). Returns predicted cycles, seconds at ``hw.cim_freq`` and
-    the reload/compute/fm/stall phase cycles."""
+    not tracked). With ``n_devices > 1`` the macro-mesh sharded path is
+    modeled: every column-sharded projection ends in a ring all-gather of
+    its output activations (``hw.allgather_cycles``), reported as a
+    ``collective`` phase - the piece whose absence made the sharded bench
+    row's gap meaningless (the 7x regression in ROADMAP). Returns
+    predicted cycles, seconds at ``hw.cim_freq`` and the
+    compute/reload/fm/stall[/collective] phase cycles."""
     from ..core.perf_model import DEFAULT_HW
     from ..sched import lm_graph, simulate
 
@@ -107,22 +142,33 @@ def predicted_serve_step(cfg, sparsity_gs: float, seq_len: int = 1,
         "fm": sum(l.fm_cycles for l in sim.layers),
         "stall": sum(l.stall_cycles for l in sim.layers),
     }
-    return {"cycles": sim.cycles, "predicted_s": sim.cycles / hw.cim_freq,
+    cycles = sim.cycles
+    if n_devices > 1:
+        # fp32 output activations of each sharded projection go around the
+        # ring once; the kernels shard every projection on the macro axis
+        collective = sum(
+            hw.allgather_cycles(l.out_h * l.out_w * l.cout * 4, n_devices)
+            for l in graph.layers())
+        phases["collective"] = collective
+        cycles += collective
+    return {"cycles": cycles, "predicted_s": cycles / hw.cim_freq,
             "phases": phases}
 
 
 def serve_gap(cfg, measured_step_s: float, sparsity_gs: float,
               measured_phases: Optional[Dict[str, float]] = None,
-              hw=None) -> dict:
+              hw=None, n_devices: int = 1) -> dict:
     """BENCH_serve's gap row: measured decode-step wall time (fenced, from
     the instrumented server) against the simulator's predicted one-token
-    step on the modeled fabric."""
-    pred = predicted_serve_step(cfg, sparsity_gs, seq_len=1, hw=hw)
+    step on the modeled fabric (all-gather included when sharded)."""
+    measured_step_s = clamp_measured([measured_step_s])
+    pred = predicted_serve_step(cfg, sparsity_gs, seq_len=1, hw=hw,
+                                n_devices=n_devices)
     return gap_report(
         pred["predicted_s"], measured_step_s,
         predicted_phases=pred["phases"], measured_phases=measured_phases,
         predicted_cycles=round(pred["cycles"], 1),
-        sparsity_gs=sparsity_gs,
+        sparsity_gs=sparsity_gs, n_devices=n_devices,
     )
 
 
@@ -166,7 +212,7 @@ def kernel_gap(m: int, k: int, n: int, tile, sparsity: float,
     timer.clear()  # first dispatch is trace+compile, excluded
     for _ in range(repeats):
         timer.timed("bsr_matmul", (m, k, n), (bk, bn), bsr_matmul, *args, **kw)
-    measured_s = min(r.seconds for r in timer.records)
+    measured_s = clamp_measured([r.seconds for r in timer.records])
 
     # the analytic model sees the matmul as a 1x1 conv with m output pixels
     hw_t = _dc.replace(hw, group=bk, alpha=bn)

@@ -9,6 +9,10 @@ Pallas BSR path with the same artifact (``executor``).
 from .allocate import (CoreAssignment, LayerAllocation, allocate_counts,
                        allocate_node, allocate_packing, device_assignment,
                        verify_conservation)
+# NOTE: the bare function is intentionally NOT imported here - binding the
+# name ``autotune`` in the package would shadow the submodule attribute
+from .autotune import (AutotuneCache, AutotuneResult, autotune_key,
+                       measure_tile, projection_shapes, refit_from_table)
 from .graph import (LayerGraph, LayerNode, attach_weights, graph_from_layers,
                     lm_graph, resnet18_graph, vgg16_graph)
 from .executor import (LayerSchedule, NetworkSchedule, build_schedule,
@@ -22,6 +26,8 @@ from .simulate import SimEvent, SimResult, cross_validate, simulate
 __all__ = [
     "CoreAssignment", "LayerAllocation", "allocate_counts", "allocate_node",
     "allocate_packing", "device_assignment", "verify_conservation",
+    "AutotuneCache", "AutotuneResult", "autotune_key",
+    "measure_tile", "projection_shapes", "refit_from_table",
     "LayerGraph", "LayerNode", "attach_weights", "graph_from_layers",
     "lm_graph", "resnet18_graph", "vgg16_graph",
     "LayerSchedule", "NetworkSchedule", "build_schedule", "deploy_layer",

@@ -55,6 +55,9 @@ class NetworkSchedule:
     layers: List[LayerSchedule]
     cycles: float
     fps: float
+    # set by the measured-latency autotuner (``sched.autotune``) when wall
+    # clock overrode (or confirmed) the simulated pick; None = never timed
+    measured_tile: Optional[tuple] = None
 
     @property
     def uniform_tile(self) -> tuple:
@@ -78,6 +81,8 @@ class NetworkSchedule:
             "a_bits": self.a_bits,
             "cycles": round(self.cycles, 1),
             "fps": round(self.fps, 2),
+            "measured_tile": (list(self.measured_tile)
+                              if self.measured_tile is not None else None),
             "layers": [
                 {
                     "name": s.name,

@@ -238,8 +238,10 @@ class BatchServer:
         self.metrics = metrics if metrics is not None else NULL_METRICS
         self._obs = bool(self.tracer.recording or self.metrics.recording)
         # fenced per-(shape, tile, backend) kernel dispatch wall times;
-        # disabled with observability so tracing-off never serializes jax
-        self.timer = DispatchTimer(enabled=self._obs)
+        # disabled with observability so tracing-off never serializes jax.
+        # The registry hookup mirrors each record into the
+        # kernel_dispatch_s histogram for the metrics snapshot.
+        self.timer = DispatchTimer(enabled=self._obs, metrics=self.metrics)
         dep = sp.deployed()
         self._tile = next(iter(dep.values())).tile if dep else None
 

@@ -1,0 +1,272 @@
+"""Measured-latency autotuner + cost-constant re-fit tests.
+
+Contracts under test:
+
+  * the autotuner's shortlist always contains the simulated pick, and the
+    measured winner's fenced wall clock on the timed workload is <= the
+    simulated pick's (the acceptance criterion of the observe->tune loop);
+  * the AutotuneCache round-trips through ``save_artifact`` /
+    ``load_artifact`` manifests, a populated cache SKIPS measurement
+    entirely, a miss with measurement disabled falls back to the simulated
+    tile, and a backend-key mismatch reads as a miss (a TPU wall clock
+    must never pick a CPU tile);
+  * ``fit_cycle_constants`` recovers synthetic per-phase cost coefficients
+    (near-zero residual), degrades to the uniform-scale fallback on
+    degenerate systems instead of crashing, and its re-derived
+    HardwareConfig reproduces the fitted seconds exactly;
+  * the all-gather cost model is zero without a mesh, monotone in bytes
+    and devices, and surfaces as the ``collective`` phase of the sharded
+    serve prediction.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import perf_model as PM
+from repro.kernels.timing import DispatchTimer
+from repro.models import registry
+from repro.obs import gap as obs_gap
+from repro.sched import autotune as AT
+from repro.serve import deployed as DP
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return registry.get_smoke_config("yi-6b", dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tuned(cfg):
+    """One real (slow-ish) autotune pass shared by the module's tests."""
+    cache = AT.AutotuneCache()
+    res = AT.autotune(cfg, top_n=2, target_sparsity=0.5, prefill_rows=8,
+                      decode_rows=2, repeats=1, cache=cache)
+    return res, cache
+
+
+# ---------------------------------------------------------------------------
+# workload signature + key
+# ---------------------------------------------------------------------------
+
+
+def test_projection_shapes_stable_and_counted(cfg):
+    shapes = AT.projection_shapes(cfg)
+    assert shapes == AT.projection_shapes(cfg)
+    assert all(d_in > 0 and d_out > 0 and n > 0 for d_in, d_out, n in shapes)
+    # counts must cover every projection of every block
+    assert sum(n for *_, n in shapes) == 7 * cfg.n_layers
+
+
+def test_autotune_key_includes_backend(cfg):
+    k_cpu = AT.autotune_key(cfg, backend="cpu")
+    k_tpu = AT.autotune_key(cfg, backend="tpu")
+    assert k_cpu != k_tpu
+    assert cfg.name in k_cpu and "cpu" in k_cpu
+    assert AT.autotune_key(cfg) == AT.autotune_key(cfg, jax.default_backend())
+
+
+# ---------------------------------------------------------------------------
+# measurement + the measured-winner contract
+# ---------------------------------------------------------------------------
+
+
+def test_measure_tile_times_real_kernel():
+    timer = DispatchTimer(enabled=True)
+    row = AT.measure_tile([(32, 32, 2)], (16, 16), 0.5, prefill_rows=8,
+                          decode_rows=2, repeats=1, timer=timer)
+    assert row["tile"] == [16, 16]
+    assert row["backend"] == jax.default_backend()
+    assert row["total_s"] == pytest.approx(row["prefill_s"] + row["decode_s"])
+    assert row["total_s"] > 0
+    # one prefill + one decode sample per distinct shape
+    assert len(row["samples"]) == 2
+    for s in row["samples"]:
+        assert s["measured_s"] > 0 and np.isfinite(s["measured_s"])
+        assert set(s["phases"]) == {"compute", "fm", "reload", "ctrl"}
+    # the fenced dispatches went through the shared timer
+    assert timer.records and all(r.name.startswith("autotune.")
+                                 for r in timer.records)
+
+
+def test_autotune_measured_winner_not_slower_than_sim_pick(tuned):
+    res, _ = tuned
+    assert not res.cache_hit
+    assert len(res.table) == 2
+    by_tile = {tuple(r["tile"]): r for r in res.table}
+    assert res.simulated_tile in by_tile  # sim pick is always shortlisted
+    best_row = by_tile[res.best_tile]
+    sim_row = by_tile[res.simulated_tile]
+    # the acceptance criterion: measured wall clock of the autotuned tile
+    # <= the simulated pick's on the same fenced workload
+    assert best_row["total_s"] <= sim_row["total_s"]
+    assert best_row["total_s"] == min(r["total_s"] for r in res.table)
+
+
+def test_refit_from_autotune_table(tuned):
+    res, _ = tuned
+    refit = AT.refit_from_table(res.table)
+    assert refit.n_samples == sum(len(r["samples"]) for r in res.table)
+    assert np.isfinite(refit.residual) and refit.residual >= 0
+    assert all(v >= 0 for v in refit.seconds_per_cycle.values())
+    # the re-derived hw must price a sample at the fitted coefficients
+    s = res.table[0]["samples"][0]
+    assert refit.predict_seconds(s["phases"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# cache semantics
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_skips_timing(cfg, tuned, monkeypatch):
+    res, cache = tuned
+    assert cache.get(res.key) is not None
+
+    def boom(*a, **kw):  # measurement must never run on a hit
+        raise AssertionError("cache hit must not re-measure")
+
+    monkeypatch.setattr(AT, "measure_tile", boom)
+    res2 = AT.autotune(cfg, top_n=2, target_sparsity=0.5, cache=cache)
+    assert res2.cache_hit
+    assert res2.best_tile == res.best_tile
+    assert res2.table == []
+
+
+def test_cache_miss_falls_back_to_simulated_tile(cfg):
+    res = AT.autotune(cfg, top_n=2, target_sparsity=0.5,
+                      cache=AT.AutotuneCache(), allow_measure=False)
+    assert not res.cache_hit
+    assert res.best_tile == res.simulated_tile
+    assert res.table == []
+
+
+def test_backend_key_mismatch_invalidates(cfg, tuned, monkeypatch):
+    res, cache = tuned
+    # re-key the stored entry as if it had been measured on a TPU: booting
+    # on this (cpu) backend must MISS and fall back to the simulated tile
+    other = AT.AutotuneCache(
+        {AT.autotune_key(cfg, backend="tpu"): cache.get(res.key)})
+
+    def boom(*a, **kw):
+        raise AssertionError("mismatched backend must not serve the cache")
+
+    monkeypatch.setattr(AT, "measure_tile", boom)
+    res2 = AT.autotune(cfg, top_n=2, target_sparsity=0.5, cache=other,
+                       allow_measure=False)
+    assert not res2.cache_hit
+    assert res2.best_tile == res2.simulated_tile
+
+
+def test_cache_round_trips_through_artifact(tmp_path, cfg, tuned):
+    res, cache = tuned
+    params = registry.model_fns(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    sp = DP.from_params(cfg, params)
+    path = str(tmp_path / "artifact")
+    DP.save_artifact(path, sp, cfg, extra={"autotune": cache.to_json(),
+                                           "autotune_tile": list(res.best_tile)})
+    _, _, meta = DP.load_artifact_tiers(path)
+    loaded = AT.AutotuneCache.from_json(meta["autotune"])
+    hit = loaded.get(res.key)
+    assert hit is not None
+    assert tuple(hit["best_tile"]) == res.best_tile
+    assert hit["backend"] == res.backend
+    assert meta["autotune_tile"] == list(res.best_tile)
+    # manifest went through JSON: the payload must be pure-JSON types
+    json.dumps(meta["autotune"])
+
+
+def test_cache_from_json_rejects_malformed():
+    with pytest.raises(ValueError):
+        AT.AutotuneCache.from_json(["not", "a", "dict"])
+    with pytest.raises(ValueError):
+        AT.AutotuneCache.from_json({"schema": 99, "entries": {}})
+    with pytest.raises(ValueError):
+        AT.AutotuneCache.from_json(
+            {"schema": AT.CACHE_SCHEMA,
+             "entries": {"k": {"best_tile": [0, "x"]}}})
+
+
+# ---------------------------------------------------------------------------
+# cost-constant re-fit
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_samples(theta, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    samples = []
+    for _ in range(n):
+        m = int(rng.integers(1, 64))
+        k = int(rng.choice([64, 128, 256]))
+        out = int(rng.choice([64, 128, 256]))
+        layer = PM.ConvLayer(1, 1, k, out, 1, m, float(rng.uniform(0, 0.9)))
+        phases = PM.layer_phase_cycles(layer, 8, 8)
+        secs = float(np.dot(PM.phase_features(phases), theta))
+        samples.append((phases, secs))
+    return samples
+
+
+def test_fit_cycle_constants_recovers_synthetic_coefficients():
+    theta = (2e-9, 5e-9, 1e-9)
+    refit = PM.fit_cycle_constants(_synthetic_samples(theta))
+    for got, want in zip((refit.seconds_per_cycle[k] for k in PM.REFIT_COEFFS),
+                         theta):
+        assert got == pytest.approx(want, rel=1e-6)
+    assert refit.residual == pytest.approx(0.0, abs=1e-9)
+    # the folded HardwareConfig reproduces the fit: cycles/cim_freq == t_mac
+    assert refit.hw.cim_freq == pytest.approx(1.0 / theta[0], rel=1e-6)
+    phases, secs = _synthetic_samples(theta, n=1, seed=7)[0]
+    assert refit.predict_seconds(phases) == pytest.approx(secs, rel=1e-6)
+
+
+def test_fit_cycle_constants_degenerate_falls_back():
+    # a single sample cannot pin three coefficients: uniform-scale fallback
+    layer = PM.ConvLayer(1, 1, 64, 64, 1, 8, 0.5)
+    phases = PM.layer_phase_cycles(layer, 8, 8)
+    refit = PM.fit_cycle_constants([(phases, 1e-3)])
+    vals = list(refit.seconds_per_cycle.values())
+    assert all(v == pytest.approx(vals[0]) for v in vals)  # one shared scale
+    assert np.isfinite(refit.residual)
+    assert refit.predict_seconds(phases) == pytest.approx(1e-3, rel=1e-6)
+
+
+def test_fit_cycle_constants_rejects_garbage():
+    layer = PM.ConvLayer(1, 1, 64, 64, 1, 8, 0.5)
+    phases = PM.layer_phase_cycles(layer, 8, 8)
+    with pytest.raises(ValueError):
+        PM.fit_cycle_constants([(phases, float("nan")), (phases, -1.0)])
+
+
+# ---------------------------------------------------------------------------
+# all-gather cost model (sharded serve prediction)
+# ---------------------------------------------------------------------------
+
+
+def test_allgather_cycles_shape():
+    hw = PM.DEFAULT_HW
+    assert hw.allgather_cycles(4096, 1) == 0.0
+    assert hw.allgather_cycles(0, 4) == 0.0
+    c2, c4 = hw.allgather_cycles(4096, 2), hw.allgather_cycles(4096, 4)
+    assert c2 > 0 and c4 > c2  # more hops
+    assert hw.allgather_cycles(8192, 4) > c4  # more bytes
+
+
+def test_predicted_serve_step_collective_phase(cfg):
+    p1 = obs_gap.predicted_serve_step(cfg, 0.5, n_devices=1)
+    p4 = obs_gap.predicted_serve_step(cfg, 0.5, n_devices=4)
+    assert "collective" not in p1["phases"]
+    assert p4["phases"]["collective"] > 0
+    assert p4["predicted_s"] > p1["predicted_s"]
+    # the non-collective phases are the single-device ones, unchanged
+    for k, v in p1["phases"].items():
+        assert p4["phases"][k] == pytest.approx(v)
+
+
+def test_serve_gap_sharded_row(cfg):
+    g = obs_gap.serve_gap(cfg, 5e-3, 0.5, n_devices=4)
+    assert g["n_devices"] == 4
+    assert np.isfinite(g["sim_vs_measured"]) and g["sim_vs_measured"] > 0
+    assert "collective" in g["predicted_phase_shares"]

@@ -27,7 +27,7 @@ from repro.core import perf_model as PM
 from repro.kernels.timing import DispatchTimer
 from repro.models import registry
 from repro.obs import (MetricsRegistry, NULL_METRICS, NULL_TRACER, Tracer,
-                       gap, phase_scope, trace as trace_mod,
+                       gap, history, phase_scope, trace as trace_mod,
                        validate_chrome_trace, validate_metrics_snapshot)
 from repro.serve import BatchConfig, BatchServer, Request, ServeConfig
 from repro.serve import deployed as DP
@@ -234,6 +234,203 @@ def test_measured_phase_shares_parses_labels():
     ph = gap.measured_phase_shares(reg.snapshot())
     assert ph == {"step.dispatch": pytest.approx(0.3),
                   "step.gather": pytest.approx(0.1)}
+
+
+def test_measured_phase_shares_tolerates_malformed_snapshot():
+    # hand-built snapshot with every malformation the parser must skip:
+    # a non-dict histogram, a label block with no '=', and a non-finite sum
+    snap = {"histograms": {
+        "serve_phase_s{phase=good}": {"sum": 0.4, "count": 2},
+        "serve_phase_s{phase=poison}": {"sum": float("nan"), "count": 1},
+        "serve_phase_s{nolabels}": {"sum": 1.0, "count": 1},
+        "serve_phase_s{phase=notdict}": "garbage",
+        "serve_phase_s{phase=badsum}": {"sum": "NaN-ish", "count": 1},
+    }}
+    assert gap.measured_phase_shares(snap) == {"good": pytest.approx(0.4)}
+
+
+def test_shares_drop_nonfinite_phases():
+    s = gap._shares({"a": 3.0, "b": float("inf"), "c": float("nan"),
+                     "d": 1.0})
+    assert s == {"a": 0.75, "d": 0.25}
+    assert gap._shares({"a": float("nan")}) == {}
+
+
+def test_clamp_measured_guards():
+    # honest samples pass through as their min
+    assert gap.clamp_measured([2e-3, 5e-3]) == pytest.approx(2e-3)
+    # zero-duration clock reads are floored, not propagated as 0 / raised
+    assert gap.clamp_measured([0.0]) == gap.MIN_MEASURED_S
+    # non-finite samples are dropped before the min
+    assert gap.clamp_measured([float("nan"), 3e-3]) == pytest.approx(3e-3)
+    # empty phase table / all-garbage samples is a hard error with a
+    # message that names the cause, not a silent zero
+    for bad in ([], [float("nan")], [float("inf")], [-1.0]):
+        with pytest.raises(ValueError, match="no usable measured samples"):
+            gap.clamp_measured(bad)
+
+
+def test_serve_gap_zero_duration_floored(smoke_model):
+    cfg, _ = smoke_model
+    # a zero p50 (empty histogram quirk) must not crash gap_report with
+    # "measured_s must be finite > 0" - it gets floored upstream
+    g = gap.serve_gap(cfg, 0.0, 0.6)
+    assert g["measured_s"] == gap.MIN_MEASURED_S
+    assert np.isfinite(g["sim_vs_measured"])
+
+
+def test_dispatch_timer_emits_metric_histograms():
+    reg = MetricsRegistry()
+    timer = DispatchTimer(enabled=True, metrics=reg)
+    import jax.numpy as jnp
+    x = jnp.ones((8, 8))
+    for _ in range(3):
+        timer.timed("matmul", (8, 8), (4, 4), lambda a: a @ a, x)
+    timer.timed("gemv", (1, 8), None, lambda a: a.sum(), x)
+    snap = reg.snapshot()
+    validate_metrics_snapshot(snap)
+    hk = [k for k in snap["histograms"] if k.startswith("kernel_dispatch_s{")]
+    assert len(hk) == 2  # one labeled series per (name, shape, tile) group
+    be = jax.default_backend()
+    mm = snap["histograms"][
+        f"kernel_dispatch_s{{backend={be},kernel=matmul,shape=8x8,tile=4x4}}"]
+    assert mm["count"] == 3 and mm["sum"] > 0
+    gv = snap["histograms"][
+        f"kernel_dispatch_s{{backend={be},kernel=gemv,shape=1x8,tile=none}}"]
+    assert gv["count"] == 1
+    # a metrics-less timer still works and emits nothing
+    bare = DispatchTimer(enabled=True)
+    bare.timed("m", None, None, lambda: 1)
+    # NULL metrics (recording=False) must not be written to either
+    null_timer = DispatchTimer(enabled=True, metrics=NULL_METRICS)
+    null_timer.timed("m", None, None, lambda: 1)
+    assert NULL_METRICS.snapshot() == {}
+
+
+# ---------------------------------------------------------------------------
+# bench history (append-only JSONL + regression gate)
+# ---------------------------------------------------------------------------
+
+
+def _hist_row(ts, metrics, backend="cpu", arch="smoke"):
+    return {"schema": history.SCHEMA_VERSION, "ts": ts, "git_sha": "abc1234",
+            "backend": backend, "arch": arch, "metrics": metrics}
+
+
+def test_history_append_load_round_trip(tmp_path):
+    p = tmp_path / "hist.jsonl"
+    r1 = history.make_row({"serve.gap": 3.0}, git_sha="s1", backend="cpu",
+                          arch="smoke")
+    r2 = history.make_row({"serve.gap": 3.1}, git_sha="s2", backend="cpu",
+                          arch="smoke")
+    history.append_row(str(p), r1)
+    history.append_row(str(p), r2)
+    rows = history.load_history(str(p))
+    assert [r["git_sha"] for r in rows] == ["s1", "s2"]
+    assert rows[0]["schema"] == history.SCHEMA_VERSION
+    # appending a malformed row is refused before it hits the file
+    with pytest.raises(ValueError):
+        history.append_row(str(p), {"schema": "x"})
+    assert len(history.load_history(str(p))) == 2
+
+
+def test_history_load_rejects_malformed(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    # line 1 is a valid row; line 2 is not JSON - the error names the line
+    p.write_text(json.dumps(_hist_row("t0", {"m": 1.0})) + "\nnot json\n")
+    with pytest.raises(ValueError, match="bad.jsonl:2"):
+        history.load_history(str(p))
+    # a structurally-bad row (valid JSON) is also rejected with its line
+    p.write_text('{"schema": 1}\n')
+    with pytest.raises(ValueError, match="bad.jsonl:1"):
+        history.load_history(str(p))
+    p2 = tmp_path / "bad2.jsonl"
+    p2.write_text(json.dumps(_hist_row("t", {"m": "NaN-string"})) + "\n")
+    with pytest.raises(ValueError):
+        history.load_history(str(p2))
+
+
+def test_history_check_needs_baseline():
+    # a single row has nothing to regress against: green, no findings
+    assert history.check_history([_hist_row("t0", {"serve.gap": 3.0})]) == []
+
+
+def test_history_check_flags_gap_drift_and_throughput_drop():
+    rows = [
+        _hist_row("t0", {"serve.gap": 3.0, "serve.s.tokens_per_s": 50.0}),
+        _hist_row("t1", {"serve.gap": 3.2, "serve.s.tokens_per_s": 52.0}),
+        _hist_row("t2", {"serve.gap": 30.0, "serve.s.tokens_per_s": 5.0}),
+    ]
+    kinds = {f["kind"] for f in history.check_history(rows)}
+    assert kinds == {"gap-drift", "throughput-drop"}
+    # drift fires in BOTH directions (a 10x better gap is also suspicious)
+    rows[2]["metrics"] = {"serve.gap": 0.1, "serve.s.tokens_per_s": 52.0}
+    assert [f["kind"] for f in history.check_history(rows)] == ["gap-drift"]
+    # within tolerance: green
+    rows[2]["metrics"] = {"serve.gap": 3.4, "serve.s.tokens_per_s": 48.0}
+    assert history.check_history(rows) == []
+
+
+def test_history_check_groups_by_backend_and_arch():
+    # a cpu baseline must never judge a tpu row
+    rows = [
+        _hist_row("t0", {"serve.gap": 3.0}, backend="cpu"),
+        _hist_row("t1", {"serve.gap": 3.0}, backend="cpu"),
+        _hist_row("t2", {"serve.gap": 300.0}, backend="tpu"),
+    ]
+    assert history.check_history(rows) == []
+
+
+def test_history_flatten_bench_reports():
+    sched = {"vgg16_w8a8": {
+        "fps_searched": 100.0,
+        "sim_vs_measured": {"sim_vs_measured": 60.0,
+                            "post_refit": {"gap": 0.7}}}}
+    m = history.flatten_sched(sched)
+    assert m == {"sched.vgg16_w8a8.gap": 60.0,
+                 "sched.vgg16_w8a8.gap_post_refit": 0.7,
+                 "sched.vgg16_w8a8.fps_searched": 100.0}
+    serve = {"arch": "yi-6b",
+             "sim_vs_measured": {"sim_vs_measured": 3.0},
+             "sharded": {"sim_vs_measured": {"sim_vs_measured": 5.0}},
+             "scan": {"tokens_per_s": 400.0}}
+    s = history.flatten_serve(serve)
+    assert s["serve.gap"] == 3.0
+    assert s["serve.sharded.gap"] == 5.0
+    assert s["serve.scan.tokens_per_s"] == 400.0
+
+
+def test_history_cli_end_to_end(tmp_path, capsys):
+    p = tmp_path / "h.jsonl"
+    sched_p = tmp_path / "BENCH_sched.json"
+    sched_p.write_text(json.dumps({"net_w8a8": {
+        "fps_searched": 10.0,
+        "sim_vs_measured": {"sim_vs_measured": 50.0,
+                            "post_refit": {"gap": 0.9}}}}))
+    args = ["append", "--out", str(p), "--sched", str(sched_p),
+            "--sha", "deadbee", "--backend", "cpu", "--arch", "bench"]
+    history.main(args)  # returns without raising on success
+    history.main(args)
+    capsys.readouterr()
+    history.main(["check", str(p)])
+    assert "no regressions" in capsys.readouterr().out
+    # inject a regression: check exits 1, --warn-only exits 0
+    bad = history.make_row({"sched.net_w8a8.gap": 5000.0,
+                            "sched.net_w8a8.fps_searched": 1.0},
+                           git_sha="bad", backend="cpu", arch="bench")
+    history.append_row(str(p), bad)
+    with pytest.raises(SystemExit) as ei:
+        history.main(["check", str(p)])
+    assert ei.value.code == 1
+    capsys.readouterr()
+    history.main(["check", str(p), "--warn-only"])  # warn-only: no exit
+    assert "REGRESSION" in capsys.readouterr().out
+    # malformed history hard-fails with exit 2 even under --warn-only
+    badfile = tmp_path / "corrupt.jsonl"
+    badfile.write_text("not json\n")
+    with pytest.raises(SystemExit) as ei:
+        history.main(["check", str(badfile), "--warn-only"])
+    assert ei.value.code == 2
 
 
 # ---------------------------------------------------------------------------
