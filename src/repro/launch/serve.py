@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import dataclasses
 import json
 import time
 
@@ -94,6 +95,32 @@ def synthetic_trace(cfg, n_requests: int, max_prompt: int, max_new: int,
         n_new = max_new if i % long_every == 0 else int(
             rng.integers(1, max(2, max_new // 6)))
         reqs.append(Request(f"r{i}", rng.integers(0, cfg.vocab, plen), n_new))
+    return reqs
+
+
+def prefix_skew_trace(cfg, n_requests: int, shared_len: int, suffix_max: int,
+                      max_new: int, seed: int = 0,
+                      shared_frac: float = 0.9):
+    """Prefix-skewed trace (the production shape: most requests share one
+    system prompt). ``shared_frac`` of the requests open with the SAME
+    ``shared_len``-token prefix followed by a short unique suffix; the rest
+    are fully unique prompts of comparable length. Which requests share is
+    DETERMINISTIC (position mod 10), so the served hit-rate is a stable
+    property of the trace, not of the seed."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(0, cfg.vocab, shared_len).astype(np.int32)
+    cut = int(round(shared_frac * 10))
+    reqs = []
+    for i in range(n_requests):
+        if i % 10 < cut:
+            sfx = rng.integers(0, cfg.vocab,
+                               int(rng.integers(1, max(2, suffix_max + 1))))
+            p = np.concatenate([system, sfx.astype(np.int32)])
+        else:
+            p = rng.integers(0, cfg.vocab,
+                             shared_len + max(1, suffix_max // 2)
+                             ).astype(np.int32)
+        reqs.append(Request(f"r{i}", p, max_new))
     return reqs
 
 
@@ -312,7 +339,8 @@ def _batch(args, cfg, params):
         print(f"macro mesh: {mesh.shape} - {n_sharded} projections "
               "column-sharded (rest replicated)")
     bcfg = BatchConfig(n_slots=args.slots, block_size=args.block_size,
-                       n_blocks=args.kv_blocks)
+                       n_blocks=args.kv_blocks,
+                       prefix_cache=not args.no_prefix_cache)
     engine = "spec" if spec_cfg is not None else args.runtime
     print(f"runtime: {engine}"
           + {"scan": " (single jitted lax.scan decode step)",
@@ -327,8 +355,18 @@ def _batch(args, cfg, params):
                       continuous=(args.engine == "batch"), mesh=mesh,
                       engine=engine, draft=draft, spec=spec_cfg,
                       tracer=tracer, metrics=metrics)
-    trace = lambda: synthetic_trace(cfg, args.requests, args.prompt_len,
-                                    args.new_tokens, seed=args.seed)
+    if args.shared_prefix > 0:
+        # align the shared span up to a block multiple: the trie matches in
+        # whole blocks, so an unaligned span would leave a partial block
+        # unshared every time
+        shared_len = -(-args.shared_prefix // args.block_size) \
+            * args.block_size
+        trace = lambda: prefix_skew_trace(
+            cfg, args.requests, shared_len, max(2, args.block_size // 2),
+            args.new_tokens, seed=args.seed)
+    else:
+        trace = lambda: synthetic_trace(cfg, args.requests, args.prompt_len,
+                                        args.new_tokens, seed=args.seed)
     srv.run(trace())  # compile
     # the warmup run's spans/samples are compile noise: drop them (the
     # tracer keeps its epoch + track names so the measured run's clocks
@@ -352,7 +390,24 @@ def _batch(args, cfg, params):
         out["tokens_match_target"] = bool(all(
             np.array_equal(rep.outputs[r.rid], ref.outputs[r.rid])
             for r in trace()))
+    if args.prefix_parity_check and rep.prefix is not None:
+        # sharing-exactness audit: the same engine with the prefix cache
+        # OFF must emit bit-identical tokens over the same trace
+        ref = BatchServer(cfg, sp, ServeConfig(temperature=args.temperature,
+                                               seed=args.seed),
+                          dataclasses.replace(bcfg, prefix_cache=False),
+                          continuous=(args.engine == "batch"), mesh=mesh,
+                          engine=engine, draft=draft,
+                          spec=spec_cfg).run(trace())
+        out["tokens_match_unshared"] = bool(all(
+            np.array_equal(rep.outputs[r.rid], ref.outputs[r.rid])
+            for r in trace()))
     print(json.dumps(out, indent=1))
+    if rep.prefix is not None:
+        pf = rep.prefix
+        print(f"prefix cache: {pf['hits']}/{pf['lookups']} hits "
+              f"(hit_rate={pf['hit_rate']}, reused {pf['hit_tokens']} "
+              "tokens)")
     for rid in list(rep.outputs)[:3]:
         print(f"  {rid}:", rep.outputs[rid].tolist())
     if tracer is not None:
@@ -418,6 +473,19 @@ def main(argv=None):
     ap.add_argument("--profile", default="",
                     help="directory for a jax.profiler trace of the "
                     "measured run (XLA-level, TensorBoard-loadable)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="serve a prefix-skewed trace instead of the mixed-"
+                    "length one: 90%% of requests share an N-token system "
+                    "prompt (N is aligned up to a block multiple) plus a "
+                    "short unique suffix - the radix-tree prefix cache "
+                    "should hit on nearly all of them")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable radix-tree prefix KV reuse (default on; "
+                    "tokens are bit-identical either way)")
+    ap.add_argument("--prefix-parity-check", action="store_true",
+                    help="also serve the trace with the prefix cache OFF "
+                    "and report tokens_match_unshared (the sharing "
+                    "bit-exactness contract)")
     ap.add_argument("--target-sparsity", type=float, default=0.5)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)

@@ -65,6 +65,11 @@ def flatten_serve(bench: Dict[str, Any]) -> Dict[str, float]:
     for name, row in bench.items():
         if isinstance(row, dict) and "tokens_per_s" in row:
             out[f"serve.{name}.tokens_per_s"] = float(row["tokens_per_s"])
+    pfx = bench.get("prefix_skew")
+    if isinstance(pfx, dict) and "hit_rate" in pfx:
+        # prefix-cache effectiveness on the skewed trace: a drop means the
+        # radix trie stopped matching (or admissions stopped adopting)
+        out["serve.prefix_skew.hit_rate"] = float(pfx["hit_rate"])
     return out
 
 

@@ -24,15 +24,21 @@
   * ``deployed.save_artifact`` / ``load_artifact`` - offline serving
     artifacts: pack once at compile time, boot without re-packing
     (two-tier artifacts carry the draft packing alongside the target).
+  * :mod:`prefix` / ``BatchConfig(prefix_cache=True)`` - radix-tree prefix
+    KV reuse: refcounted, copy-on-write paged blocks let admissions whose
+    prompt shares a full-block prefix adopt the cached block chain and
+    prefill only the unshared suffix (cache-hit TTFT ~ one decode step),
+    with greedy tokens bit-identical to sharing off.
   * ``BatchServer(tracer=..., metrics=...)`` - opt-in observability
     (:mod:`repro.obs`): fenced phase spans (admit/prefill/gather/dispatch/
     sample/writeback, spec draft/verify/commit), per-request lifecycle
     tracks, occupancy gauges and per-(shape, tile, backend) kernel
     dispatch timing; disabled by default at no-op cost.
 """
-from . import batching, deployed, server, spec, stacked  # noqa: F401
+from . import batching, deployed, prefix, server, spec, stacked  # noqa: F401
 from .batching import PagedKVCache, Request, RequestQueue  # noqa: F401
 from .engine import Engine, ServeConfig  # noqa: F401
+from .prefix import PrefixTrie  # noqa: F401
 from .server import BatchConfig, BatchServer, ServeReport  # noqa: F401
 from .spec import SpecConfig, SpecParams  # noqa: F401
 from .stacked import StackedParams  # noqa: F401

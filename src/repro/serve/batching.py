@@ -16,6 +16,27 @@ The pieces the continuous-batching server composes:
 Physical block 0 is reserved as scratch: idle batch lanes read and write it
 so every decode step keeps a fixed shape, and its contents are never
 attended by a live slot.
+
+Block lifecycle contract (load-bearing for prefix sharing, see
+``serve.prefix``):
+
+  * every non-scratch block carries a REFCOUNT. ``_alloc`` grants a block
+    at refcount 1; ``retain``/``release`` move it; a block whose refcount
+    hits 0 is SCRUBBED (zeroed, or NaN-poisoned under ``debug_poison``)
+    and returned to the LIFO free list - a reused block can never leak the
+    previous request's K/V into the next slot's gathered view.
+  * the same physical block may appear in several slot tables (and in the
+    prefix trie) - that is what a prefix-cache hit adopts. Accounting
+    (``blocks_in_use``, ``peak_blocks``, the ``kv_utilization`` gauge)
+    counts PHYSICAL live blocks, so shared blocks are never double-counted:
+    ``free_blocks + blocks_in_use == n_blocks - 1`` always.
+  * every write path (``write_prefill`` / ``write_token`` / ``write_run``)
+    is copy-on-write: a write landing in a block with refcount > 1 first
+    copies the block (ALL tiers - the tiers share one refcount ledger) into
+    a fresh allocation and repoints only the writer's table entry.
+  * ``ensure`` is all-or-nothing: on pool exhaustion it raises WITHOUT
+    growing the table, so a caller that catches the error and requeues the
+    request leaks nothing.
 """
 from __future__ import annotations
 
@@ -107,6 +128,7 @@ class Slot:
     t_admit: float
     token_times: List[float]
     queue_wait_s: float = 0.0  # admission minus arrival (TTFT's queue share)
+    prefix_tokens: int = 0  # prompt tokens adopted from the prefix cache
 
     @property
     def done(self) -> bool:
@@ -135,7 +157,7 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, n_slots: int, n_blocks: int,
                  block_size: int, dtype=None, mesh: Optional[Mesh] = None,
-                 tiers: int = 1):
+                 tiers: int = 1, debug_poison: bool = False):
         if n_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is scratch)")
         if tiers < 1:
@@ -163,10 +185,18 @@ class PagedKVCache:
         # LIFO free list => a freed block is the first one re-granted
         self._free: List[int] = list(range(1, n_blocks))
         self.tables: List[List[int]] = [[] for _ in range(n_slots)]
+        # per-block refcount: 0 = free (or scratch), 1 = exclusively owned,
+        # >1 = shared (appears in several tables and/or the prefix trie)
+        self.refcnt = np.zeros(n_blocks, np.int32)
+        # scrub freed blocks with NaN instead of 0 (float pools only): a
+        # live gather that wrongly references a freed block then poisons
+        # its attention output instead of silently reading zeros
+        self.debug_poison = debug_poison
         # stats
         self._ever_used: set = set()
         self.n_alloc = 0
         self.n_reused = 0
+        self.n_cow = 0
         self.peak_blocks = 0
 
     # -- accounting ---------------------------------------------------------
@@ -177,7 +207,9 @@ class PagedKVCache:
 
     @property
     def blocks_in_use(self) -> int:
-        return sum(len(t) for t in self.tables)
+        """PHYSICAL live blocks (refcount > 0): a block shared by several
+        tables and/or the prefix trie counts once, never per reference."""
+        return int((self.refcnt[1:] > 0).sum())
 
     def blocks_for(self, n_pos: int) -> int:
         return -(-n_pos // self.block_size)
@@ -189,6 +221,7 @@ class PagedKVCache:
             "kv_tiers": self.tiers,
             "allocations": self.n_alloc,
             "reused_blocks": self.n_reused,
+            "cow_copies": self.n_cow,
             "peak_blocks": self.peak_blocks,
             "kv_heads_sharded": self._view_sharding is not None,
         }
@@ -205,54 +238,130 @@ class PagedKVCache:
             self.n_reused += 1
         self._ever_used.add(b)
         self.n_alloc += 1
-        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use + 1)
+        self.refcnt[b] = 1
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
         return b
 
-    def ensure(self, slot: int, n_pos: int) -> None:
-        """Grow ``slot``'s table until positions [0, n_pos) fit."""
+    def retain(self, block: int) -> None:
+        """Add a reference to a LIVE block (sharing it into another table
+        or the prefix trie)."""
+        if block <= 0 or block >= self.n_blocks or self.refcnt[block] < 1:
+            raise ValueError(f"retain: block {block} is not a live block")
+        self.refcnt[block] += 1
+
+    def release(self, block: int) -> None:
+        """Drop one reference; the last release scrubs the block and
+        returns it to the LIFO free list."""
+        if block <= 0 or block >= self.n_blocks or self.refcnt[block] < 1:
+            raise ValueError(f"release: block {block} is not a live block")
+        self.refcnt[block] -= 1
+        if self.refcnt[block] == 0:
+            self._scrub(block)
+            self._free.append(block)
+
+    def _scrub(self, block: int) -> None:
+        fill = (np.nan if self.debug_poison
+                and np.issubdtype(self.pool_k.dtype, np.floating) else 0)
+        self.pool_k[:, block] = fill
+        self.pool_v[:, block] = fill
+
+    def adopt(self, slot: int, blocks: List[int]) -> None:
+        """Append already-live shared blocks to ``slot``'s table (a
+        prefix-cache hit adopting a matched chain), retaining each. Must
+        precede any ``ensure`` growth so logical positions line up."""
         t = self.tables[slot]
-        while len(t) * self.block_size < n_pos:
+        for b in blocks:
+            self.retain(b)
+            t.append(b)
+
+    def ensure(self, slot: int, n_pos: int) -> None:
+        """Grow ``slot``'s table until positions [0, n_pos) fit.
+
+        All-or-nothing: if the pool cannot cover the WHOLE growth the call
+        raises without appending anything, so a caller that catches the
+        exhaustion and requeues the request leaks no blocks."""
+        t = self.tables[slot]
+        need = self.blocks_for(n_pos) - len(t)
+        if need > len(self._free):
+            raise RuntimeError(
+                "paged KV pool exhausted - admission control should have "
+                "reserved worst-case blocks; raise n_blocks")
+        for _ in range(need):
             t.append(self._alloc())
 
     def free_slot(self, slot: int) -> None:
-        self._free.extend(reversed(self.tables[slot]))
+        # reversed so the slot's FIRST block lands last on the LIFO free
+        # list and is therefore the first one re-granted (blocks shared
+        # with other tables/the trie stay live - only this reference drops)
+        for b in reversed(self.tables[slot]):
+            self.release(b)
         self.tables[slot] = []
+
+    def _ensure_owned(self, slot: int, block_idx: int) -> int:
+        """Copy-on-write: make ``slot``'s logical block ``block_idx``
+        exclusively owned before a write. Shared blocks are copied (every
+        tier - the tiers share one refcount ledger) into a fresh
+        allocation and only the writer's table entry is repointed."""
+        pb = self.tables[slot][block_idx]
+        if self.refcnt[pb] == 1:
+            return pb
+        nb = self._alloc()  # raises on exhaustion BEFORE any state moves
+        self.pool_k[:, nb] = self.pool_k[:, pb]
+        self.pool_v[:, nb] = self.pool_v[:, pb]
+        self.tables[slot][block_idx] = nb
+        self.release(pb)
+        self.n_cow += 1
+        return nb
 
     # -- data movement ------------------------------------------------------
 
     def write_prefill(self, slot: int, k: jnp.ndarray, v: jnp.ndarray,
-                      true_len: int, tier: int = 0) -> None:
-        """Scatter a prefill cache (L, S_pad, KV, dh) into ``slot``'s blocks.
-        Only ceil(true_len / block_size) blocks are allocated; pad positions
-        inside the last block carry garbage that decode overwrites before
-        its mask ever reaches them."""
+                      true_len: int, tier: int = 0, start: int = 0) -> None:
+        """Scatter a prefill cache (L, S_pad, KV, dh) into ``slot``'s blocks
+        covering positions ``start .. start+true_len-1`` (``start`` must be
+        block-aligned - the suffix-prefill path after a prefix-cache hit).
+        Only the covered blocks are allocated; pad positions inside the last
+        block carry garbage that decode overwrites before its mask ever
+        reaches them."""
         bs = self.block_size
-        self.ensure(slot, true_len)
+        if start % bs:
+            raise ValueError(f"write_prefill start={start} must be a "
+                             f"multiple of block_size={bs}")
+        self.ensure(slot, start + true_len)
         k, v = np.asarray(k), np.asarray(v)
-        for i, pb in enumerate(self.tables[slot]):
+        b0 = start // bs
+        for i in range(self.blocks_for(true_len)):
+            pb = self._ensure_owned(slot, b0 + i)
             self.pool_k[tier, pb] = k[:, i * bs:(i + 1) * bs]
             self.pool_v[tier, pb] = v[:, i * bs:(i + 1) * bs]
 
-    def view_tables(self, n_view: int) -> np.ndarray:
-        """(n_slots, n_view) physical ids; short/idle slots pad with the
-        scratch block (masked out by per-row positions)."""
-        tbl = np.zeros((self.n_slots, n_view), np.int32)
-        for s, t in enumerate(self.tables):
+    def view_tables(self, n_view: int,
+                    slots: Optional[List[int]] = None) -> np.ndarray:
+        """(len(slots), n_view) physical ids (all slots by default);
+        short/idle slots pad with the scratch block (masked out by per-row
+        positions)."""
+        sl = list(range(self.n_slots)) if slots is None else slots
+        tbl = np.zeros((len(sl), n_view), np.int32)
+        for r, s in enumerate(sl):
+            t = self.tables[s]
             n = min(len(t), n_view)
-            tbl[s, :n] = t[:n]
+            tbl[r, :n] = t[:n]
         return tbl
 
-    def gather(self, n_view: int, tier: int = 0
+    def gather(self, n_view: int, tier: int = 0,
+               slots: Optional[List[int]] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """(L, B, n_view*block_size, KV, dh) contiguous K/V views."""
-        tbl = self.view_tables(n_view)
+        """(L, B, n_view*block_size, KV, dh) contiguous K/V views; ``slots``
+        restricts B to those lanes (a cache-hit suffix pass gathers ONE)."""
+        tbl = self.view_tables(n_view, slots)
         L = self.cfg.n_layers
         bs, kvh, dh = self.block_size, self.cfg.n_kv_heads_eff, self.cfg.dh
 
         def _g(pool):
             g = pool[tier][tbl]  # (B, n_view, L, bs, KV, dh)
             g = g.transpose(2, 0, 1, 3, 4, 5)
-            out = jnp.asarray(g.reshape(L, self.n_slots, n_view * bs, kvh, dh))
+            out = jnp.asarray(
+                g.reshape(L, tbl.shape[0], n_view * bs, kvh, dh))
             if self._view_sharding is not None:
                 out = jax.device_put(out, self._view_sharding)
             return out
@@ -262,13 +371,14 @@ class PagedKVCache:
     def write_coords(self, positions: List[Optional[int]]
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """Physical (block, offset) per lane for a decode-step write; idle
-        lanes (None) target the scratch block."""
+        lanes (None) target the scratch block. Copy-on-write fires here:
+        the coords returned always point at exclusively-owned blocks."""
         pb = np.zeros((self.n_slots,), np.int32)
         off = np.zeros((self.n_slots,), np.int32)
         for s, pos in enumerate(positions):
             if pos is None:
                 continue
-            pb[s] = self.tables[s][pos // self.block_size]
+            pb[s] = self._ensure_owned(s, pos // self.block_size)
             off[s] = pos % self.block_size
         return pb, off
 
@@ -292,9 +402,15 @@ class PagedKVCache:
         passed here - rejected draft KV is rolled back by simply never
         reaching the pool (the gathered views the rejects were written
         into are throwaways)."""
-        t, bs = self.tables[slot], self.block_size
+        bs = self.block_size
         k_run, v_run = np.asarray(k_run), np.asarray(v_run)
-        for i in range(k_run.shape[1]):
+        n = k_run.shape[1]
+        if n == 0:
+            return
+        for bi in range(start // bs, (start + n - 1) // bs + 1):
+            self._ensure_owned(slot, bi)
+        t = self.tables[slot]
+        for i in range(n):
             pb = t[(start + i) // bs]
             off = (start + i) % bs
             self.pool_k[tier][pb, :, off] = k_run[:, i]

@@ -469,6 +469,55 @@ def decode_step_paged(sp: ServingParams, views_k: jnp.ndarray,
     return logits, jnp.stack(ks), jnp.stack(vs)
 
 
+def _mlp_tokenwise(p: dict, h, cfg: ModelConfig):
+    """MLP over (B, T, D) with SEQUENTIAL-DECODE semantics per token.
+
+    The dense-family MLP is position-independent, but ``moe_block`` routes
+    with a capacity computed from the sequence length - a T-token pass
+    would share capacity across the T tokens and could drop a (token,
+    expert) pair that a one-token decode step keeps. Folding T into the
+    batch axis gives every token the exact s=1 routing the sequential
+    decode steps use, which is what the verify pass's bit-exactness
+    contract requires."""
+    if cfg.family != "moe":
+        return _mlp(p, h, cfg)
+    b, t, d = h.shape
+    return _mlp(p, h.reshape(b * t, 1, d), cfg).reshape(b, t, d)
+
+
+def verify_step(sp: ServingParams, views_k: jnp.ndarray,
+                views_v: jnp.ndarray, pos: jnp.ndarray, tokens: jnp.ndarray,
+                cfg: ModelConfig):
+    """Batched multi-token pass over gathered paged views (loop runtime).
+
+    ``tokens`` (B, T) are row b's next T input tokens at absolute positions
+    ``pos[b] .. pos[b]+T-1``. Position ``t``'s logits are BIT-IDENTICAL to
+    what T sequential :func:`decode_step_paged` calls would produce after
+    consuming ``tokens[:, :t+1]`` - every op is row/position-independent
+    and masked view padding is numerically inert. The mirror of
+    ``serve.stacked.verify_step`` for per-layer (non-stacked) weights;
+    the suffix-prefill path after a prefix-cache hit runs the unshared
+    prompt span through this in one pass instead of T decode steps.
+
+    Returns (logits (B, T, V), k_new (L, B, T, KV, dh), v_new)."""
+    x = L.embed(sp.embed, tokens, cfg.param_dtype)  # (B, T, D)
+    windows, thetas = _layer_window_theta(cfg)
+    ks, vs = [], []
+    for i, p in enumerate(sp.layers):
+        cfg_l = transformer._with_theta(cfg, thetas[i])
+        h = L.rmsnorm(x, p["ln1"])
+        attn, kn, vn = L.decode_attention_multi(
+            p, h, views_k[i], views_v[i], pos, cfg_l, window=windows[i])
+        x = x + attn
+        h = L.rmsnorm(x, p["ln2"])
+        x = x + _mlp_tokenwise(p, h, cfg)
+        ks.append(kn)
+        vs.append(vn)
+    x = L.rmsnorm(x, sp.final_ln)
+    logits = L.logits_out(_head(sp), x, cfg.cim)[..., : cfg.vocab]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
 def model_fns(cfg: ModelConfig) -> registry.ModelFns:
     """ModelFns whose prefill/decode consume a :class:`ServingParams` in
     place of raw params - plug into ``serve.Engine`` via its ``fns`` arg to

@@ -37,6 +37,7 @@ from . import deployed, stacked
 from . import spec as spec_mod
 from .batching import PagedKVCache, Request, RequestQueue, Slot, kv_view_spec
 from .engine import ServeConfig, sample_tokens
+from .prefix import PrefixTrie
 
 
 @dataclasses.dataclass
@@ -53,6 +54,11 @@ class BatchConfig:
     # recompiles O(log) times instead of once per sequence-length block
     view_bucket: int = 2
     idle_wait_s: float = 0.002
+    # radix-tree prefix KV reuse: admissions whose prompt shares a
+    # full-block prefix with an earlier request adopt the cached block
+    # chain (refcount bump, copy-on-write on divergence) and prefill only
+    # the unshared suffix. Greedy tokens are bit-identical either way.
+    prefix_cache: bool = True
 
 
 def _percentiles(xs: List[float]) -> dict:
@@ -83,6 +89,9 @@ class ServeReport:
     # per-request admission-minus-arrival: the scheduling share of TTFT
     queue_wait_s: List[float] = dataclasses.field(default_factory=list)
     metrics: Optional[dict] = None  # obs snapshot (instrumented runs only)
+    # prefix-cache telemetry: trie hit/insert/evict counts plus the
+    # hit-vs-miss split of service TTFT (None when prefix_cache=False)
+    prefix: Optional[dict] = None
 
     @property
     def tokens_per_s(self) -> float:
@@ -128,6 +137,8 @@ class ServeReport:
             out["spec"] = self.spec
         if self.metrics is not None:
             out["metrics"] = self.metrics
+        if self.prefix is not None:
+            out["prefix"] = self.prefix
         return out
 
 
@@ -225,11 +236,17 @@ class BatchServer:
             self._decode = jax.jit(stacked.decode_step_paged,
                                    static_argnames=("cfg",),
                                    donate_argnums=donate)
+            # multi-token pass for the prefix-cache suffix prefill
+            self._verify = jax.jit(stacked.verify_step,
+                                   static_argnames=("cfg",),
+                                   donate_argnums=donate)
         else:
             self._params = sp
             self._prefill = jax.jit(deployed.prefill_last,
                                     static_argnames=("cfg",))
             self._decode = jax.jit(deployed.decode_step_paged,
+                                   static_argnames=("cfg",))
+            self._verify = jax.jit(deployed.verify_step,
                                    static_argnames=("cfg",))
         # speculative lookahead: a verify writes KV up to pos+k, so
         # worst-case reservation must cover k extra positions per slot
@@ -279,47 +296,132 @@ class BatchServer:
             req = q.pop_ready(now)
             if req is None:
                 return
-            if self._worst_blocks(req) > kv.n_blocks - 1:
+            wb = self._worst_blocks(req)
+            if wb > kv.n_blocks - 1:
                 raise ValueError(
-                    f"{req.rid}: needs {self._worst_blocks(req)} blocks, pool "
+                    f"{req.rid}: needs {wb} blocks, pool "
                     f"has {kv.n_blocks - 1} - raise n_blocks/block_size")
-            if self._worst_blocks(req) > kv.free_blocks - self._reserved(slots, kv):
+            # prefix-cache lookup: adopt the matched chain FIRST (refcount
+            # bump) so the trie eviction below can never free it out from
+            # under this admission
+            shared: List[int] = []
+            if self._trie is not None:
+                shared = self._trie.match(req.prompt)
+                if shared:
+                    kv.adopt(i, shared)
+                if self._obs:
+                    self.metrics.counter("prefix_lookups").inc()
+                    if shared:
+                        self.metrics.counter("prefix_hits").inc()
+                        self.metrics.counter("prefix_tokens_reused").inc(
+                            len(shared) * self.bcfg.block_size)
+            # sharing-aware reservation: adopted blocks are already live,
+            # so only the UNSHARED span demands fresh blocks
+            need = wb - len(shared)
+            avail = kv.free_blocks - self._reserved(slots, kv)
+            if need > avail and self._trie is not None:
+                # drop cold cached prefixes the trie is the last holder of
+                self._trie.evict(need - avail)
+                avail = kv.free_blocks - self._reserved(slots, kv)
+            if need > avail:
+                kv.free_slot(i)  # roll back the adoption - leaks nothing
                 q.requeue(req)  # backpressure: wait for a drain, keep FIFO
                 return
+            if self._obs and self._trie is not None:
+                self.metrics.gauge("prefix_trie_blocks").set(
+                    self._trie.held_blocks())
             key, sub = jax.random.split(key)
+            # stamp queue wait at THIS request's admission, not the wave's
+            # entry time: when several slots fill in one wave, the time a
+            # later request spent behind earlier prefills is queue wait,
+            # not its own service (TTFT splits on that boundary)
             slots[i] = self._prefill_slot(
-                i, req, kv, sub,
-                queue_wait=max(0.0, now - max(req.arrival, 0.0)))
+                i, req, kv, sub, n_shared=len(shared),
+                queue_wait=max(0.0, self._now() - max(req.arrival, 0.0)))
 
     def _prefill_slot(self, i: int, req: Request, kv: PagedKVCache,
-                      key, queue_wait: float = 0.0) -> Slot:
-        with self._phase("prefill", rid=req.rid, slot=i):
-            return self._prefill_impl(i, req, kv, key, queue_wait)
+                      key, queue_wait: float = 0.0, n_shared: int = 0) -> Slot:
+        with self._phase("prefill", rid=req.rid, slot=i,
+                         shared_blocks=n_shared):
+            return self._prefill_impl(i, req, kv, key, queue_wait, n_shared)
 
     def _prefill_impl(self, i: int, req: Request, kv: PagedKVCache,
-                      key, queue_wait: float) -> Slot:
+                      key, queue_wait: float, n_shared: int = 0) -> Slot:
         bs = self.bcfg.block_size
         tlen = len(req.prompt)
-        pad = (-tlen) % bs
-        toks = np.pad(req.prompt, (0, pad))[None]  # (1, S_pad)
-        target = (self._params.target if self.spec is not None
-                  else self._params)
-        logits, k, v = self._prefill(target, jnp.asarray(toks),
-                                     jnp.asarray(tlen, jnp.int32),
-                                     cfg=self.cfg)
-        kv.write_prefill(i, k[:, 0], v[:, 0], tlen)
-        if self.spec is not None:
-            # draft-tier prefill: keeps the draft cache in lockstep with
-            # the target from the first decode step (its logits are unused
-            # - the first emitted token is the TARGET's, like any engine)
-            _, kd, vd = self._prefill(self._params.draft, jnp.asarray(toks),
-                                      jnp.asarray(tlen, jnp.int32),
-                                      cfg=self.cfg)
-            kv.write_prefill(i, kd[:, 0], vd[:, 0], tlen, tier=1)
+        if n_shared:
+            logits = self._suffix_prefill(i, req, kv, n_shared)
+        else:
+            pad = (-tlen) % bs
+            toks = np.pad(req.prompt, (0, pad))[None]  # (1, S_pad)
+            target = (self._params.target if self.spec is not None
+                      else self._params)
+            logits, k, v = self._prefill(target, jnp.asarray(toks),
+                                         jnp.asarray(tlen, jnp.int32),
+                                         cfg=self.cfg)
+            kv.write_prefill(i, k[:, 0], v[:, 0], tlen)
+            if self.spec is not None:
+                # draft-tier prefill: keeps the draft cache in lockstep with
+                # the target from the first decode step (its logits are
+                # unused - the first emitted token is the TARGET's, like
+                # any engine)
+                _, kd, vd = self._prefill(self._params.draft,
+                                          jnp.asarray(toks),
+                                          jnp.asarray(tlen, jnp.int32),
+                                          cfg=self.cfg)
+                kv.write_prefill(i, kd[:, 0], vd[:, 0], tlen, tier=1)
+        if self._trie is not None:
+            # register this prompt's full blocks AFTER the KV writes land
+            # (inserting first would let the writes copy-on-write the fresh
+            # blocks away from their own prefill); chunks already cached
+            # keep their existing block - including the ones just adopted
+            nf = tlen // bs
+            if nf:
+                self._trie.insert(req.prompt[: nf * bs], kv.tables[i][:nf])
         tok = int(self._sample_row(logits, key)[0])
         now = self._now()
         return Slot(req=req, pos=tlen, next_token=tok, out=[tok],
-                    t_admit=now, token_times=[now], queue_wait_s=queue_wait)
+                    t_admit=now, token_times=[now], queue_wait_s=queue_wait,
+                    prefix_tokens=n_shared * bs)
+
+    def _suffix_prefill(self, i: int, req: Request, kv: PagedKVCache,
+                        n_shared: int) -> jnp.ndarray:
+        """Prefix-cache hit: positions [0, n_shared*bs) were adopted from
+        the trie, so only the unshared suffix runs - ONE multi-token
+        ``verify_step`` over the gathered paged views (the same pass
+        speculative decode verifies drafts with) computes the suffix KV and
+        the last real position's logits. Cache-hit TTFT is therefore one
+        (multi-token) decode step, not a full prefill."""
+        bs = self.bcfg.block_size
+        tlen = len(req.prompt)
+        m = n_shared * bs
+        t = tlen - m  # >= 1 by the trie's match cap
+        t_pad = -(-t // bs) * bs
+        kv.ensure(i, tlen)
+        # pad suffix tokens sit at positions >= tlen: causal per-row masking
+        # keeps them out of every real position's logits/KV, and their own
+        # KV is simply never committed
+        toks = jnp.asarray(np.pad(req.prompt[m:], (0, t_pad - t))[None])
+        pos = jnp.asarray([m], jnp.int32)
+        nv = -(-kv.blocks_for(m + t_pad) // self.bcfg.view_bucket) \
+            * self.bcfg.view_bucket
+        target = (self._params.target if self.spec is not None
+                  else self._params)
+        vk, vv = kv.gather(nv, tier=0, slots=[i])
+        logits, ks, vs = self._verify(target, vk, vv,
+                                      pos, toks, cfg=self.cfg)
+        ks, vs = np.asarray(ks), np.asarray(vs)
+        kv.write_run(i, m, ks[:, 0, :t], vs[:, 0, :t])
+        if self.spec is not None:
+            # draft tier: same suffix pass over the tier-1 views, so the
+            # draft cache stays in lockstep from the first spec round
+            dk, dv = kv.gather(nv, tier=1, slots=[i])
+            _, kd, vd = self._verify(self._params.draft,
+                                     dk, dv,
+                                     pos, toks, cfg=self.cfg)
+            kd, vd = np.asarray(kd), np.asarray(vd)
+            kv.write_run(i, m, kd[:, 0, :t], vd[:, 0, :t], tier=1)
+        return logits[:, t - 1]
 
     # -- main loop -----------------------------------------------------------
 
@@ -432,10 +534,15 @@ class BatchServer:
                           bcfg.block_size, mesh=self.mesh,
                           tiers=2 if self.spec is not None else 1)
         slots: List[Optional[Slot]] = [None] * bcfg.n_slots
+        # the trie lives per run() so traces are independent (and warmup
+        # runs never warm the cache of a timed run)
+        self._trie = PrefixTrie(kv) if bcfg.prefix_cache else None
         outputs: Dict[str, np.ndarray] = {}
         ttft: List[float] = []
         tpot: List[float] = []
         queue_wait: List[float] = []
+        ttft_hit: List[float] = []  # service TTFT, split hit vs miss
+        ttft_miss: List[float] = []
         key = jax.random.PRNGKey(scfg.seed)
         n_steps = 0
         self._spec_stats = (spec_mod.SpecStats(self.spec.k,
@@ -448,6 +555,8 @@ class BatchServer:
             outputs[s.req.rid] = np.asarray(s.out, np.int32)
             ttft.append(s.token_times[0] - max(s.req.arrival, 0.0))
             queue_wait.append(s.queue_wait_s)
+            service = max(ttft[-1] - s.queue_wait_s, 0.0)
+            (ttft_hit if s.prefix_tokens else ttft_miss).append(service)
             tpot.extend(np.diff(s.token_times).tolist())
             if self.tracer.recording:
                 # retroactive lifecycle spans: queued -> served, on a queue
@@ -521,13 +630,24 @@ class BatchServer:
             disp = self.timer.summary()
             if disp and snap is not None:
                 snap["kernel_dispatch"] = disp
+        prefix = None
+        if self._trie is not None:
+            prefix = {k: (round(v, 4) if isinstance(v, float) else v)
+                      for k, v in self._trie.stats().items()}
+            prefix["cow_copies"] = kv.n_cow
+            # hit-vs-miss split of SERVICE TTFT (queue wait excluded): the
+            # number a cache hit is supposed to shrink toward one decode step
+            prefix["ttft_service_hit"] = {
+                k: round(v, 5) for k, v in _percentiles(ttft_hit).items()}
+            prefix["ttft_service_miss"] = {
+                k: round(v, 5) for k, v in _percentiles(ttft_miss).items()}
         rep = ServeReport(
             n_requests=len(outputs), total_tokens=total, wall_s=wall,
             n_decode_steps=n_steps, ttft_s=ttft, tpot_s=tpot,
             outputs=outputs, kv_stats=stats,
             spec=(self._spec_stats.to_json()
                   if self._spec_stats is not None else None),
-            queue_wait_s=queue_wait, metrics=snap,
+            queue_wait_s=queue_wait, metrics=snap, prefix=prefix,
         )
         rep._n_slots = bcfg.n_slots
         return rep

@@ -13,7 +13,9 @@ the sparse-tier cost). This module turns that knob into decode throughput:
   * the TARGET tier is the existing compressed (or dense) model;
   * :class:`SpecParams` holds both tiers as ``StackedParams`` sharing one
     :class:`~repro.serve.batching.PagedKVCache` layout (tier 0 = target KV,
-    tier 1 = draft KV - same block tables, same positions);
+    tier 1 = draft KV - same block tables, same positions, and ONE refcount
+    ledger: a prefix-cache hit adopts both tiers' KV at once, and a
+    copy-on-write copies every tier of the shared block);
   * :func:`draft_propose` is the jitted draft loop: k greedy proposals with
     the compiled scan runtime (plus one trailing KV-fill step so the draft
     cache covers every position the target may commit);

@@ -235,20 +235,9 @@ def decode_step_paged(sxp: StackedParams, views_k: jnp.ndarray,
     return logits, ks, vs
 
 
-def _mlp_tokenwise(p: dict, h, cfg: ModelConfig):
-    """MLP over (B, T, D) with SEQUENTIAL-DECODE semantics per token.
-
-    The dense-family MLP is position-independent, but ``moe_block`` routes
-    with a capacity computed from the sequence length - a T-token pass
-    would share capacity across the T tokens and could drop a (token,
-    expert) pair that a one-token decode step keeps. Folding T into the
-    batch axis gives every token the exact s=1 routing the sequential
-    decode steps use, which is what the verify pass's bit-exactness
-    contract requires."""
-    if cfg.family != "moe":
-        return DP._mlp(p, h, cfg)
-    b, t, d = h.shape
-    return DP._mlp(p, h.reshape(b * t, 1, d), cfg).reshape(b, t, d)
+# MLP over (B, T, D) with sequential-decode semantics per token - one
+# source of truth, shared with the loop runtime (docstring there)
+_mlp_tokenwise = DP._mlp_tokenwise
 
 
 def verify_step(sxp: StackedParams, views_k: jnp.ndarray,

@@ -1,0 +1,319 @@
+"""Radix-tree prefix KV reuse with copy-on-write paged blocks.
+
+The contracts under test:
+
+  * sharing never changes tokens: with ``prefix_cache`` on, every engine
+    (loop, scan, spec; single-device and macro-sharded) emits greedy tokens
+    BIT-IDENTICAL to the same trace served with sharing off, while the
+    report shows real cache hits;
+  * copy-on-write isolates writers: a write into a block shared by two
+    tables (or the trie) copies the block - every tier of it - and repoints
+    only the writer, leaving the other readers' K/V untouched;
+  * the trie itself matches longest full-block prefixes (capped so a
+    suffix token always remains), retains what it registers, and its LRU
+    eviction only drops blocks it is the last holder of.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.serve import deployed as DP
+from repro.serve import spec as SP
+from repro.serve.batching import PagedKVCache, Request
+from repro.serve.engine import ServeConfig
+from repro.serve.prefix import PrefixTrie
+from repro.serve.server import BatchConfig, BatchServer
+from repro.serve.spec import SpecConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = registry.get_smoke_config("yi-6b", dtype="float32")
+    params = registry.model_fns(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prefix_trace(cfg, n=8, shared_len=8, suffix_max=4, max_new=5, seed=3):
+    """n requests, ~3/4 sharing one ``shared_len``-token system prompt."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(0, cfg.vocab, shared_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        if i % 4 != 3:
+            sfx = rng.integers(0, cfg.vocab,
+                               int(rng.integers(1, suffix_max + 1)))
+            p = np.concatenate([system, sfx.astype(np.int32)])
+        else:
+            p = rng.integers(0, cfg.vocab, shared_len + 1).astype(np.int32)
+        reqs.append(Request(f"r{i}", p, max_new))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# PrefixTrie unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_trie_match_caps_below_full_prompt(dense_model):
+    """A match never swallows the whole prompt: >= 1 suffix token must
+    remain to produce the first output token."""
+    cfg, _ = dense_model
+    kv = PagedKVCache(cfg, n_slots=2, n_blocks=16, block_size=4)
+    trie = PrefixTrie(kv)
+    prompt = np.arange(12, dtype=np.int32)
+    kv.ensure(0, 12)
+    trie.insert(prompt, kv.tables[0][:3])
+    # identical prompt: only 2 of the 3 registered blocks may match
+    assert trie.match(prompt) == kv.tables[0][:2]
+    # longer prompt with the same prefix: all 3 match
+    assert trie.match(np.arange(13, dtype=np.int32)) == kv.tables[0][:3]
+    # diverging second block: only the first matches
+    other = np.concatenate([np.arange(4), [99] * 8]).astype(np.int32)
+    assert trie.match(other) == kv.tables[0][:1]
+    assert trie.match(np.asarray([7, 7], np.int32)) == []
+
+
+def test_trie_insert_retains_and_survives_free_slot(dense_model):
+    cfg, _ = dense_model
+    kv = PagedKVCache(cfg, n_slots=2, n_blocks=16, block_size=4)
+    trie = PrefixTrie(kv)
+    prompt = np.arange(9, dtype=np.int32)
+    kv.ensure(0, 9)
+    held = list(kv.tables[0])
+    trie.insert(prompt[:8], kv.tables[0][:2])
+    assert kv.refcnt[held[0]] == 2 and kv.refcnt[held[1]] == 2
+    assert kv.refcnt[held[2]] == 1  # partial block never registered
+    kv.free_slot(0)
+    # registered blocks outlive the producing slot; the partial one freed
+    assert kv.refcnt[held[0]] == 1 and kv.refcnt[held[1]] == 1
+    assert kv.refcnt[held[2]] == 0
+    assert trie.match(prompt) == held[:2]
+    # re-inserting the same chunks must not double-retain
+    kv.ensure(1, 8)
+    trie.insert(prompt[:8], held[:2])
+    assert kv.refcnt[held[0]] == 1
+
+
+def test_trie_lru_eviction_frees_only_last_holder(dense_model):
+    cfg, _ = dense_model
+    kv = PagedKVCache(cfg, n_slots=2, n_blocks=16, block_size=4)
+    trie = PrefixTrie(kv)
+    kv.ensure(0, 8)
+    a = list(kv.tables[0])
+    trie.insert(np.arange(8, dtype=np.int32), a)
+    kv.ensure(1, 4)
+    b = list(kv.tables[1])
+    trie.insert(np.asarray([50, 51, 52, 53], np.int32), b)
+    # chain a is still held by slot 0 => refcnt 2, not evictable; only the
+    # leaf of chain b (slot 1 freed below) can actually free a block
+    kv.free_slot(1)
+    trie.match(np.arange(9, dtype=np.int32))  # touch a: b becomes LRU
+    freed = trie.evict(1)
+    assert freed == 1
+    assert kv.refcnt[b[0]] == 0 and b[0] in kv._free
+    assert trie.match(np.asarray([50, 51, 52, 53, 0], np.int32)) == []
+    # nothing else is evictable while slot 0 holds chain a
+    assert trie.evict(5) == 0
+    assert trie.match(np.arange(9, dtype=np.int32)) == a[:2]
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write at the pool level
+# ---------------------------------------------------------------------------
+
+
+def test_cow_write_isolates_shared_block(dense_model):
+    """A decode write into a shared block copies it first: the sharer keeps
+    the original K/V bit-for-bit."""
+    cfg, _ = dense_model
+    kv = PagedKVCache(cfg, n_slots=2, n_blocks=8, block_size=2)
+    L_, KV, dh = cfg.n_layers, cfg.n_kv_heads_eff, cfg.dh
+    rng = np.random.default_rng(0)
+    k0 = rng.standard_normal((L_, 4, KV, dh)).astype(np.float32)
+    kv.write_prefill(0, jnp.asarray(k0), jnp.asarray(2 * k0), true_len=4)
+    kv.adopt(1, list(kv.tables[0]))
+    assert kv.tables[1] == kv.tables[0]
+    snap = {b: kv.pool_k[0, b].copy() for b in kv.tables[0]}
+    # slot 1 overwrites position 1 (inside the first shared block)
+    kn = rng.standard_normal((L_, 2, KV, dh)).astype(np.float32)
+    pb, off = kv.write_coords([None, 1])
+    kv.write_token(pb, off, jnp.asarray(kn), jnp.asarray(kn))
+    assert kv.n_cow == 1
+    assert kv.tables[1][0] != kv.tables[0][0]  # writer repointed
+    assert kv.tables[1][1] == kv.tables[0][1]  # untouched block still shared
+    for b, want in snap.items():  # reader's payload untouched
+        np.testing.assert_array_equal(kv.pool_k[0, b], want)
+    # writer's copy carries the original data plus the new entry
+    nb = kv.tables[1][0]
+    np.testing.assert_array_equal(kv.pool_k[0, nb, :, 0], snap[kv.tables[0][0]][:, 0])
+    np.testing.assert_array_equal(kv.pool_k[0, nb, :, 1], kn[:, 1])
+    assert kv.free_blocks + kv.blocks_in_use == kv.n_blocks - 1
+
+
+def test_cow_copies_every_tier(dense_model):
+    """Tiers share one refcount ledger: CoW on a two-tier pool must copy
+    the draft tier alongside the target tier."""
+    cfg, _ = dense_model
+    kv = PagedKVCache(cfg, n_slots=2, n_blocks=8, block_size=2, tiers=2)
+    L_, KV, dh = cfg.n_layers, cfg.n_kv_heads_eff, cfg.dh
+    rng = np.random.default_rng(1)
+    k = rng.standard_normal((L_, 2, KV, dh)).astype(np.float32)
+    kv.write_prefill(0, jnp.asarray(k), jnp.asarray(k), true_len=2, tier=0)
+    kv.write_prefill(0, jnp.asarray(3 * k), jnp.asarray(3 * k), true_len=2,
+                     tier=1)
+    kv.adopt(1, list(kv.tables[0]))
+    kn = rng.standard_normal((L_, 2, KV, dh)).astype(np.float32)
+    pb, off = kv.write_coords([None, 0])
+    kv.write_token(pb, off, jnp.asarray(kn), jnp.asarray(kn), tier=0)
+    nb, ob = kv.tables[1][0], kv.tables[0][0]
+    assert nb != ob
+    # tier 1 of the copy carries the draft KV even though only tier 0 wrote
+    np.testing.assert_array_equal(kv.pool_k[1, nb], kv.pool_k[1, ob])
+    assert np.any(kv.pool_k[1, nb])
+
+
+def test_write_prefill_start_must_be_block_aligned(dense_model):
+    cfg, _ = dense_model
+    kv = PagedKVCache(cfg, n_slots=1, n_blocks=8, block_size=4)
+    L_, KV, dh = cfg.n_layers, cfg.n_kv_heads_eff, cfg.dh
+    k = np.zeros((L_, 4, KV, dh), np.float32)
+    with pytest.raises(ValueError, match="block_size"):
+        kv.write_prefill(0, jnp.asarray(k), jnp.asarray(k), true_len=4,
+                         start=2)
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: sharing on == sharing off (loop, scan, spec)
+# ---------------------------------------------------------------------------
+
+
+def _run_pair(cfg, sp, reqs, engine, bcfg, **kw):
+    on = BatchServer(cfg, sp, scfg=ServeConfig(), bcfg=bcfg,
+                     engine=engine, **kw).run(
+        [dataclasses.replace(r) for r in reqs])
+    off = BatchServer(cfg, sp, scfg=ServeConfig(),
+                      bcfg=dataclasses.replace(bcfg, prefix_cache=False),
+                      engine=engine, **kw).run(
+        [dataclasses.replace(r) for r in reqs])
+    return on, off
+
+
+@pytest.mark.parametrize("engine", ["loop", "scan"])
+def test_prefix_sharing_tokens_bit_identical(dense_model, engine):
+    cfg, params = dense_model
+    sp = DP.from_params(cfg, params)
+    reqs = _prefix_trace(cfg)
+    bcfg = BatchConfig(n_slots=3, block_size=4, n_blocks=48)
+    on, off = _run_pair(cfg, sp, reqs, engine, bcfg)
+    for r in reqs:
+        np.testing.assert_array_equal(
+            on.outputs[r.rid], off.outputs[r.rid],
+            err_msg=f"{engine}: sharing changed {r.rid}'s tokens")
+    assert on.prefix["hits"] > 0, "trace produced no cache hits"
+    assert on.prefix["hit_tokens"] > 0
+    assert off.prefix is None  # sharing off reports no prefix block
+    # shared blocks are counted once: the sharing run allocates fewer
+    assert on.kv_stats["allocations"] < off.kv_stats["allocations"]
+
+
+def test_prefix_sharing_tokens_bit_identical_spec(dense_model):
+    cfg0, _ = dense_model
+    cfg = registry.get_smoke_config("yi-6b", dtype="float32",
+                                    cim_mode="qat")
+    params = registry.model_fns(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    sp = DP.compress(cfg, params, target_sparsity=0.5, tile=(16, 16))
+    draft = SP.draft_serving(cfg, sp, 0.9)
+    reqs = _prefix_trace(cfg, n=5, max_new=4)
+    bcfg = BatchConfig(n_slots=2, block_size=4, n_blocks=48)
+    on, off = _run_pair(cfg, sp, reqs, "spec", bcfg, draft=draft,
+                        spec=SpecConfig(k=3, draft_sparsity=0.9))
+    for r in reqs:
+        np.testing.assert_array_equal(
+            on.outputs[r.rid], off.outputs[r.rid],
+            err_msg=f"spec: sharing changed {r.rid}'s tokens")
+    assert on.prefix["hits"] > 0
+
+
+def test_prefix_report_shape(dense_model):
+    cfg, params = dense_model
+    sp = DP.from_params(cfg, params)
+    rep = BatchServer(cfg, sp, scfg=ServeConfig(),
+                      bcfg=BatchConfig(n_slots=2, block_size=4, n_blocks=48)
+                      ).run(_prefix_trace(cfg, n=4))
+    j = rep.to_json()
+    assert "prefix" in j
+    for key in ("lookups", "hits", "hit_rate", "hit_tokens", "cow_copies",
+                "ttft_service_hit", "ttft_service_miss"):
+        assert key in j["prefix"], key
+    assert j["prefix"]["lookups"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Macro-sharded parity (subprocess: forced host devices need XLA_FLAGS
+# before jax imports - same pattern as tests/test_sharded_serve.py)
+# ---------------------------------------------------------------------------
+
+
+def run_sub(code: str):
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = " ".join(
+        ([env["XLA_FLAGS"]] if env.get("XLA_FLAGS") else [])
+        + ["--xla_force_host_platform_device_count=8"])
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=REPO, timeout=420)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_prefix_sharing_macro_sharded_parity():
+    out = run_sub("""
+import dataclasses
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.models import registry
+from repro.serve import deployed as DP
+from repro.serve.batching import Request
+from repro.serve.engine import ServeConfig
+from repro.serve.server import BatchConfig, BatchServer
+
+cfg = registry.get_smoke_config("yi-6b", dtype="float32", cim_mode="qat")
+params = registry.model_fns(cfg).init_params(cfg, jax.random.PRNGKey(0))
+sp = DP.compress(cfg, params, target_sparsity=0.5, tile=(16, 16))
+mesh = Mesh(np.array(jax.devices()[:2]), ("macro",))
+ssp = DP.shard(sp, mesh)
+
+rng = np.random.default_rng(3)
+system = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+reqs = []
+for i in range(5):
+    if i != 2:
+        p = np.concatenate([system,
+                            rng.integers(0, cfg.vocab, 1 + i % 3).astype(np.int32)])
+    else:
+        p = rng.integers(0, cfg.vocab, 9).astype(np.int32)
+    reqs.append(Request(f"r{i}", p, 4))
+
+bcfg = BatchConfig(n_slots=2, block_size=4, n_blocks=48)
+on = BatchServer(cfg, ssp, scfg=ServeConfig(), bcfg=bcfg, mesh=mesh,
+                 engine="scan").run([dataclasses.replace(r) for r in reqs])
+off = BatchServer(cfg, ssp, scfg=ServeConfig(),
+                  bcfg=dataclasses.replace(bcfg, prefix_cache=False),
+                  mesh=mesh, engine="scan").run(
+    [dataclasses.replace(r) for r in reqs])
+assert on.prefix["hits"] > 0, on.prefix
+for r in reqs:
+    np.testing.assert_array_equal(on.outputs[r.rid], off.outputs[r.rid])
+print("OK hits=", on.prefix["hits"])
+""")
+    assert "OK" in out

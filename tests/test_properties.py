@@ -216,3 +216,91 @@ def test_storage_accounting_consistent(seed):
     idx_bits = int(S.index_storage_bits(mask, 16, 16))
     n_sets = (64 // 16) * (64 // 16)
     assert idx_bits == 16 * round((1 - zg) * n_sets)
+
+
+# ---------------------------------------------------------------------------
+# Paged-KV block lifecycle (refcounts, CoW, atomic ensure)
+# ---------------------------------------------------------------------------
+
+_KV_CFG = None
+
+
+def _kv_cfg():
+    global _KV_CFG
+    if _KV_CFG is None:
+        from repro.models import registry
+        _KV_CFG = registry.get_smoke_config("yi-6b", dtype="float32")
+    return _KV_CFG
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_paged_kv_lifecycle_invariants(data):
+    """Random admit/ensure/write/adopt/free sequences keep the pool
+    accounting exact: every usable block is either free or live (counted
+    once however many tables share it), refcounts equal table references,
+    the free list never aliases a live block, and a failed ``ensure``
+    changes nothing."""
+    from repro.serve.batching import PagedKVCache
+
+    cfg = _kv_cfg()
+    n_slots, n_blocks, bs = 3, 8, 2
+    kv = PagedKVCache(cfg, n_slots, n_blocks, bs)
+    rng = np.random.default_rng(0)
+    shared_used = False
+
+    def check():
+        assert kv.free_blocks + kv.blocks_in_use == kv.n_blocks - 1
+        refs = np.zeros(kv.n_blocks, np.int64)
+        for t in kv.tables:
+            for b in t:
+                assert b > 0  # scratch never enters a table
+                refs[b] += 1
+        # no prefix trie in play: table references ARE the refcounts
+        np.testing.assert_array_equal(refs, kv.refcnt)
+        if not shared_used:
+            assert (kv.refcnt <= 1).all()  # no aliasing without adopt
+        free = kv._free
+        assert len(set(free)) == len(free) and 0 not in free
+        assert all(kv.refcnt[b] == 0 for b in free)
+        assert kv.peak_blocks <= kv.n_blocks - 1
+        assert kv.n_reused <= kv.n_alloc
+
+    for _ in range(data.draw(st.integers(1, 30))):
+        op = data.draw(st.sampled_from(["ensure", "free", "write",
+                                        "adopt", "write"]))
+        s = data.draw(st.integers(0, n_slots - 1))
+        if op == "ensure":
+            n_pos = data.draw(st.integers(1, (n_blocks + 1) * bs))
+            before = list(kv.tables[s])
+            free_before = list(kv._free)
+            try:
+                kv.ensure(s, n_pos)
+            except RuntimeError:  # exhausted: must be all-or-nothing
+                assert kv.tables[s] == before
+                assert kv._free == free_before
+        elif op == "free":
+            kv.free_slot(s)
+        elif op == "adopt":
+            src = data.draw(st.integers(0, n_slots - 1))
+            if kv.tables[src] and not kv.tables[s] and src != s:
+                kv.adopt(s, list(kv.tables[src]))
+                shared_used = True
+        else:  # decode-style write, copy-on-write when the block is shared
+            if not kv.tables[s]:
+                continue
+            pos = data.draw(st.integers(0, len(kv.tables[s]) * bs - 1))
+            positions = [None] * n_slots
+            positions[s] = pos
+            try:
+                pb, off = kv.write_coords(positions)
+            except RuntimeError:
+                check()  # CoW found the pool exhausted: still balanced
+                continue
+            k = rng.standard_normal(
+                (cfg.n_layers, n_slots, cfg.n_kv_heads_eff, cfg.dh)
+            ).astype(np.float32)
+            kv.write_token(pb, off, k, k)
+            # after a write the touched block is exclusively owned
+            assert kv.refcnt[kv.tables[s][pos // bs]] == 1
+        check()

@@ -334,3 +334,62 @@ def test_prune_mask_keeps_everything_at_zero_sparsity():
                     jnp.float32)
     assert float(S.prune_mask_2d(w, 8, 8, 0.0).mean()) == 1.0
     assert float(S.prune_mask_conv(w.reshape(2, 2, 8, 32), 8, 8, 0.0).mean()) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Block lifecycle: atomic exhaustion, scrub-on-free (ISSUE 8 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_ensure_exhaustion_is_atomic(dense_model):
+    """On pool exhaustion ``ensure`` must raise WITHOUT growing the table -
+    a caller that catches the error and requeues the request would
+    otherwise leak every block appended before the failure."""
+    cfg, _ = dense_model
+    kv = PagedKVCache(cfg, n_slots=2, n_blocks=6, block_size=4)
+    kv.ensure(0, 12)  # 3 of the 5 usable blocks
+    free_before = list(kv._free)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        kv.ensure(1, 16)  # needs 4, only 2 free
+    assert kv.tables[1] == []  # nothing leaked into the failed table
+    assert kv._free == free_before  # nothing popped either
+    assert kv.free_blocks + kv.blocks_in_use == kv.n_blocks - 1
+    kv.ensure(1, 8)  # a fitting request still succeeds afterwards
+    assert len(kv.tables[1]) == 2
+
+
+def test_freed_blocks_are_scrubbed(dense_model):
+    """``free_slot`` must zero returned blocks: once blocks are shared, a
+    reused block carrying the previous request's K/V would surface in
+    another slot's gathered view."""
+    cfg, _ = dense_model
+    kv = PagedKVCache(cfg, n_slots=1, n_blocks=4, block_size=2)
+    L_, KV, dh = cfg.n_layers, cfg.n_kv_heads_eff, cfg.dh
+    k = np.ones((L_, 4, KV, dh), np.float32)
+    kv.write_prefill(0, jnp.asarray(k), jnp.asarray(2 * k), true_len=4)
+    held = list(kv.tables[0])
+    assert all(np.any(kv.pool_k[0, b]) for b in held)
+    kv.free_slot(0)
+    for b in held:
+        assert not np.any(kv.pool_k[0, b]), f"block {b} kept stale K"
+        assert not np.any(kv.pool_v[0, b]), f"block {b} kept stale V"
+    # and a realloc-then-gather sees zeros, not the old payload
+    kv.ensure(0, 2)
+    got_k, got_v = kv.gather(n_view=1)
+    assert not np.any(np.asarray(got_k)) and not np.any(np.asarray(got_v))
+
+
+def test_debug_poison_fills_freed_blocks_with_nan(dense_model):
+    """Under ``debug_poison`` a freed float block is NaN-filled so any
+    gather that wrongly references it poisons its output loudly."""
+    cfg, _ = dense_model
+    kv = PagedKVCache(cfg, n_slots=1, n_blocks=4, block_size=2,
+                      debug_poison=True)
+    L_, KV, dh = cfg.n_layers, cfg.n_kv_heads_eff, cfg.dh
+    k = np.ones((L_, 2, KV, dh), np.float32)
+    kv.write_prefill(0, jnp.asarray(k), jnp.asarray(k), true_len=2)
+    held = list(kv.tables[0])
+    kv.free_slot(0)
+    for b in held:
+        assert np.all(np.isnan(kv.pool_k[0, b]))
+        assert np.all(np.isnan(kv.pool_v[0, b]))
