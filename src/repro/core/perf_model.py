@@ -400,21 +400,28 @@ def expected_spec_tokens(k: int, accept: float) -> float:
 
 
 def speculative_summary(c_draft_step: float, c_verify: float, k: int,
-                        accept: float) -> dict:
+                        accept: float,
+                        draft_steps: int | None = None) -> dict:
     """Throughput model for one speculative round on the CIM fabric.
 
     ``c_draft_step`` is the simulated cycle cost of ONE draft-tier decode
-    step (its reload + compute at the draft sparsity); ``c_verify`` the
-    cost of one (k+1)-token target pass. The draft loop runs k+1 steps
-    (k proposals + the trailing KV-fill step that keeps the draft cache in
-    lockstep). ``accept`` is the modeled per-token acceptance probability -
-    a calibration input, NOT simulated; the serve benchmark reports the
-    measured rate to calibrate against."""
+    step (its reload + compute at the draft sparsity, or the kept-sublayer
+    fraction of a target step for the layer-skip family); ``c_verify`` the
+    cost of one (k+1)-token target pass. ``draft_steps`` is how many draft
+    steps a round runs: the reprune default is k+1 (k proposals + the
+    trailing KV-fill step that keeps its separate draft cache in lockstep);
+    the layer-skip family passes k - it has no draft cache to fill.
+    ``accept`` is the modeled per-token acceptance probability - a
+    calibration input, NOT simulated; the serve benchmark reports the
+    measured rate to calibrate against (``sched.search.SpecCalibration``)."""
+    if draft_steps is None:
+        draft_steps = k + 1
     tokens = expected_spec_tokens(k, accept)
-    cycles = (k + 1) * c_draft_step + c_verify
+    cycles = draft_steps * c_draft_step + c_verify
     return {
         "k": k,
         "accept": round(min(max(accept, 0.0), 1.0), 4),
+        "draft_steps": draft_steps,
         "tokens_per_round": round(tokens, 4),
         "cycles_per_round": round(cycles, 1),
         "tokens_per_kcycle": round(1e3 * tokens / max(cycles, 1e-9), 5),

@@ -144,30 +144,69 @@ def _parse_tile(spec):
     return (int(bk), int(bn))
 
 
-def _parse_spec(arg, cfg, target_sparsity):
-    """'k=4,draft_sparsity=0.9' -> SpecConfig; 'auto' picks both from the
-    simulated draft-tier reload+compute cost (sched.search.search_spec);
-    '' -> None (no speculation)."""
+def _load_calibration(args):
+    """Boot the measured acceptance prior from the artifact manifest (the
+    same persistence slot as the autotune cache). Returns an empty
+    SpecCalibration when there is none - search_spec then falls back to
+    the uncalibrated priors."""
+    from ..sched.search import SpecCalibration
+    stored = None
+    if args.artifact:
+        try:
+            stored = deployed.load_artifact_extra(
+                args.artifact).get("spec_calibration")
+        except (OSError, ValueError):
+            stored = None
+    if stored is None:
+        return SpecCalibration()
+    try:
+        cal = SpecCalibration.from_json(stored)
+        print(f"spec: loaded acceptance calibration "
+              f"({len(cal.rows)} measured row(s)) from the artifact "
+              "manifest")
+        return cal
+    except ValueError as e:
+        print(f"spec: stored calibration unusable ({e}) - using "
+              "uncalibrated priors")
+        return SpecCalibration()
+
+
+def _parse_spec(arg, cfg, target_sparsity, calibration=None):
+    """'k=4,draft_sparsity=0.9' or 'draft=layerskip,keep=0.5,k=4' ->
+    SpecConfig; 'auto' picks (family, k, knob) from the simulated cost and
+    the calibrated acceptance prior - and returns None (serve the scan
+    engine) when even the best candidate models a LOSS; '' -> None (no
+    speculation)."""
     if not arg:
         return None
     if arg == "auto":
         from ..sched import search_spec
-        res = search_spec(cfg, target_sparsity=target_sparsity)
-        print("spec auto-pick:", json.dumps(res.best))
-        print(f"spec auto-pick: acceptance {res.best['accept']} is a "
-              "MODELED prior (sched.search.default_accept_model), not a "
-              "measurement - compare against the served acceptance_rate "
-              "in the report/BENCH_serve.json and pass a fitted "
-              "accept_model to search_spec for calibrated picks")
-        if res.best["speedup_vs_target"] <= 1.0:
-            print("spec auto-pick: best candidate models "
-                  f"{res.best['speedup_vs_target']}x vs target-only decode "
-                  "- speculation would not pay; serving WITHOUT it")
+        res = search_spec(cfg, target_sparsity=target_sparsity,
+                          calibration=calibration, arch=cfg.name)
+        d = res.decision
+        print("spec auto:", json.dumps(d))
+        if d["accept_source"] != "calibrated":
+            print(f"spec auto: acceptance {d['accept']} is a MODELED prior "
+                  "(sched.search uncalibrated fallback), not a measurement "
+                  "- serve one spec run with --artifact and the measured "
+                  "rate is persisted for the next pick")
+        if d["verdict"] == "declined":
+            print(f"spec auto: declined: scan wins (best candidate "
+                  f"{d['family']} k={d['k']} models "
+                  f"{d['predicted_speedup']}x vs target-only decode) - "
+                  "serving the scan engine")
             return None
-        return SpecConfig(k=int(res.best["k"]),
-                          draft_sparsity=float(res.best["draft_sparsity"]))
-    usage = (f"--spec expects k=INT,draft_sparsity=FLOAT or 'auto', "
-             f"got {arg!r}")
+        print(f"spec auto: serving {d['family']} k={d['k']} "
+              f"({'keep' if d['family'] == 'layerskip' else 'draft_sparsity'}"
+              f"={d['knob']}, predicted {d['predicted_speedup']}x, "
+              f"accept={d['accept']} [{d['accept_source']}])")
+        if d["family"] == "layerskip":
+            return SpecConfig(k=int(d["k"]), draft="layerskip",
+                              keep=float(d["knob"]))
+        return SpecConfig(k=int(d["k"]), draft_sparsity=float(d["knob"]))
+    usage = (f"--spec expects 'auto' or comma-joined k=INT, "
+             f"draft=reprune|layerskip, draft_sparsity=FLOAT, keep=FLOAT, "
+             f"adaptive_k=0|1, got {arg!r}")
     kw = {}
     for part in arg.split(","):
         key, _, val = part.partition("=")
@@ -177,6 +216,12 @@ def _parse_spec(arg, cfg, target_sparsity):
                 kw["k"] = int(val)
             elif key == "draft_sparsity":
                 kw["draft_sparsity"] = float(val)
+            elif key == "draft":
+                kw["draft"] = val.strip()
+            elif key == "keep":
+                kw["keep"] = float(val)
+            elif key == "adaptive_k":
+                kw["adaptive_k"] = bool(int(val))
             else:
                 raise SystemExit(usage)
         except ValueError:
@@ -272,6 +317,10 @@ def _serving_params(args, cfg, params, spec_cfg=None):
                 _report_artifact_autotune(cfg, meta)
             if spec_cfg is None:
                 return sp, None, None
+            if spec_cfg.draft == "layerskip":
+                # the layerskip family drafts with a sublayer subset of the
+                # TARGET envelope - no second packing to load or build
+                return sp, None, spec_cfg
             if draft is not None:
                 stored_ds = meta.get("draft_sparsity")
                 if (stored_ds is not None
@@ -304,7 +353,7 @@ def _serving_params(args, cfg, params, spec_cfg=None):
                                       deployed.default_schedule(cfg)),
                             tile=tile, uniform=at_result is not None)
           if args.compressed else deployed.from_params(cfg, params))
-    if spec_cfg is not None:
+    if spec_cfg is not None and spec_cfg.draft == "reprune":
         draft = spec_mod.draft_serving(cfg, sp, spec_cfg.draft_sparsity,
                                        tile=tile)
     if args.artifact:
@@ -322,11 +371,16 @@ def _serving_params(args, cfg, params, spec_cfg=None):
 
 def _batch(args, cfg, params):
     mesh = _parse_mesh(args.mesh)
-    spec_cfg = _parse_spec(args.spec, cfg, args.target_sparsity)
+    calibration = _load_calibration(args) if args.spec else None
+    spec_cfg = _parse_spec(args.spec, cfg, args.target_sparsity,
+                           calibration=calibration)
     sp, draft, spec_cfg = _serving_params(args, cfg, params, spec_cfg)
     if args.compressed:
         print("compression:", json.dumps(sp.report()))
-    if spec_cfg is not None:
+    if spec_cfg is not None and spec_cfg.draft == "layerskip":
+        print(f"spec: layerskip draft over the target envelope, "
+              f"keep={spec_cfg.keep}, k={spec_cfg.k} (no second packing)")
+    elif spec_cfg is not None:
         print(f"spec: draft tier packed at sparsity "
               f"{spec_cfg.draft_sparsity} "
               f"({json.dumps(draft.report())}), k={spec_cfg.k}")
@@ -355,6 +409,11 @@ def _batch(args, cfg, params):
                       continuous=(args.engine == "batch"), mesh=mesh,
                       engine=engine, draft=draft, spec=spec_cfg,
                       tracer=tracer, metrics=metrics)
+    if spec_cfg is not None and spec_cfg.draft == "layerskip":
+        a_on, m_on = srv.spec_masks
+        print(f"spec: layerskip masks attn={list(a_on)} mlp={list(m_on)} "
+              f"(executes {spec_mod.kept_fraction(a_on, m_on):.2f} of the "
+              "sublayer units; nnz-ranked importance)")
     if args.shared_prefix > 0:
         # align the shared span up to a block multiple: the trie matches in
         # whole blocks, so an unaligned span would leave a partial block
@@ -403,7 +462,23 @@ def _batch(args, cfg, params):
             np.array_equal(rep.outputs[r.rid], ref.outputs[r.rid])
             for r in trace()))
     print(json.dumps(out, indent=1))
-    if rep.prefix is not None:
+    if (spec_cfg is not None and rep.spec is not None
+            and rep.spec.get("proposed", 0) > 0):
+        # close the calibration loop: fold the MEASURED acceptance into the
+        # prior and persist it into the artifact manifest (next --spec auto
+        # picks from data, not the uncalibrated prior)
+        gap = (1.0 - spec_cfg.keep if spec_cfg.draft == "layerskip"
+               else spec_cfg.draft_sparsity - args.target_sparsity)
+        calibration.add(cfg.name, spec_cfg.draft, gap,
+                        rep.spec["acceptance_rate"],
+                        weight=float(rep.spec["proposed"]))
+        if args.artifact:
+            deployed.update_artifact_extra(
+                args.artifact, {"spec_calibration": calibration.to_json()})
+            print(f"spec: measured acceptance "
+                  f"{rep.spec['acceptance_rate']} folded into the "
+                  f"calibration ({len(calibration.rows)} row(s)) and "
+                  "persisted to the artifact manifest")
         pf = rep.prefix
         print(f"prefix cache: {pf['hits']}/{pf['lookups']} hits "
               f"(hit_rate={pf['hit_rate']}, reused {pf['hit_tokens']} "
@@ -437,11 +512,15 @@ def main(argv=None):
                     "weights; scan = one jitted lax.scan over the stacked "
                     "uniform envelope (bit-identical tokens)")
     ap.add_argument("--spec", default="",
-                    help="speculative decode: k=INT,draft_sparsity=FLOAT "
-                    "(e.g. k=4,draft_sparsity=0.9) packs a second, "
-                    "higher-sparsity draft tier of the same weights and "
-                    "serves engine='spec'; 'auto' picks both from the "
-                    "simulated draft-tier cost")
+                    help="speculative decode: comma-joined k=INT, "
+                    "draft=reprune|layerskip, draft_sparsity=FLOAT (reprune "
+                    "knob: packs a second higher-sparsity tier), keep=FLOAT "
+                    "(layerskip knob: draft runs the nnz-ranked top keep "
+                    "fraction of the TARGET envelope's sublayers - no "
+                    "second packing), adaptive_k=0|1. 'auto' picks (family, "
+                    "k, knob) from simulated cost + the calibrated "
+                    "acceptance prior, or declines and serves the scan "
+                    "engine when speculation models a loss")
     ap.add_argument("--parity-check", action="store_true",
                     help="with --spec: also run target-only scan decode "
                     "over the trace and report tokens_match_target (the "

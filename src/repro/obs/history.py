@@ -70,6 +70,13 @@ def flatten_serve(bench: Dict[str, Any]) -> Dict[str, float]:
         # prefix-cache effectiveness on the skewed trace: a drop means the
         # radix trie stopped matching (or admissions stopped adopting)
         out["serve.prefix_skew.hit_rate"] = float(pfx["hit_rate"])
+    spec = bench.get("spec_vs_scan")
+    if isinstance(spec, dict) and "acceptance_rate" in spec:
+        # draft-vs-target agreement: a drop means the draft family stopped
+        # predicting the target (speculation decays toward pure overhead
+        # long before tokens/s shows it on a noisy runner)
+        out["serve.spec_vs_scan.acceptance_rate"] = \
+            float(spec["acceptance_rate"])
     return out
 
 
@@ -141,7 +148,11 @@ def _is_gap(metric: str) -> bool:
 
 
 def _is_throughput(metric: str) -> bool:
-    return metric.endswith(".tokens_per_s") or metric.endswith(".fps_searched")
+    # acceptance_rate gates like throughput: higher is better, a large
+    # relative drop is the regression
+    return metric.endswith(".tokens_per_s") \
+        or metric.endswith(".fps_searched") \
+        or metric.endswith(".acceptance_rate")
 
 
 def _median(vals: Sequence[float]) -> float:

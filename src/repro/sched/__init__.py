@@ -19,8 +19,9 @@ from .executor import (LayerSchedule, NetworkSchedule, build_schedule,
                        deploy_layer, execute_layer, execute_network,
                        schedule_from_search, verify_layer)
 from .search import (CandidateResult, MappingCandidate, SearchResult,
-                     SpecSearchResult, default_candidate, greedy_search,
-                     search_mapping, search_spec)
+                     SpecCalibration, SpecSearchResult,
+                     default_candidate, greedy_search, search_mapping,
+                     search_spec)
 from .simulate import SimEvent, SimResult, cross_validate, simulate
 
 __all__ = [
@@ -33,7 +34,7 @@ __all__ = [
     "LayerSchedule", "NetworkSchedule", "build_schedule", "deploy_layer",
     "execute_layer", "execute_network", "schedule_from_search", "verify_layer",
     "CandidateResult", "MappingCandidate", "SearchResult",
-    "SpecSearchResult", "default_candidate", "greedy_search",
-    "search_mapping", "search_spec",
+    "SpecCalibration", "SpecSearchResult", "default_candidate",
+    "greedy_search", "search_mapping", "search_spec",
     "SimEvent", "SimResult", "cross_validate", "simulate",
 ]

@@ -32,6 +32,8 @@ This module provides the bridge:
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -333,6 +335,37 @@ def load_artifact(path: str, tier: str = "target"
                 "save_artifact(..., draft=...) for speculative serving")
         return draft, extra
     raise ValueError(f"{path}: unknown tier {tier!r}")
+
+
+def load_artifact_extra(path: str) -> dict:
+    """Read ONLY the manifest-extra of a serving artifact (no array
+    deserialization). Returns {} when the artifact does not exist - this
+    is the cheap pre-boot probe for manifest-carried state (autotune
+    cache, spec calibration)."""
+    step = ckpt.latest_step(path)
+    if step is None:
+        return {}
+    with open(os.path.join(path, f"step_{step:08d}", "manifest.json")) as f:
+        manifest = json.load(f)
+    return manifest.get("extra", {}) or {}
+
+
+def update_artifact_extra(path: str, updates: dict) -> None:
+    """Merge ``updates`` into an existing artifact's manifest-extra WITHOUT
+    re-serializing the weight tree. This is how post-serve measurements
+    (the spec-acceptance calibration) persist next to the packing they
+    measured: the manifest is rewritten atomically, arrays untouched."""
+    step = ckpt.latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no artifact at {path}")
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    manifest.setdefault("extra", {}).update(updates)
+    tmp = os.path.join(d, ".manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, os.path.join(d, "manifest.json"))
 
 
 # ---------------------------------------------------------------------------

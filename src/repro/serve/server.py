@@ -162,10 +162,14 @@ class BatchServer:
         ``engine`` picks the decode runtime over the SAME weights:
         ``"loop"`` (python loop over per-layer packed weights), ``"scan"``
         (``serve.stacked``: one jitted lax.scan per step over the uniform
-        envelope, views donated), or ``"spec"`` (self-speculative: a
-        higher-sparsity ``draft`` tier proposes ``spec.k`` tokens with the
-        scan runtime and ONE multi-token target verify accepts the longest
-        greedy-matching prefix plus a correction token). All three produce
+        envelope, views donated), or ``"spec"`` (self-speculative: a draft
+        tier proposes up to ``spec.k`` tokens with the scan runtime - the
+        reprune family over a higher-sparsity ``draft`` packing, the
+        layerskip family by an nnz-ranked sublayer subset of the target's
+        own envelope - and ONE multi-token target verify accepts the
+        longest greedy-matching prefix plus a correction token; per-slot
+        adaptive k collapses the draft length when acceptance dies). All
+        three produce
         bit-identical greedy tokens; spec additionally requires greedy
         decoding (temperature 0) - with sampling the acceptance rule would
         need distribution-preserving rejection sampling, which this engine
@@ -210,25 +214,46 @@ class BatchServer:
         donate = (1, 2) if jax.default_backend() != "cpu" else ()
         self.spec = None
         if engine == "spec":
-            if draft is None:
+            self.spec = spec if spec is not None else spec_mod.SpecConfig()
+            if self.spec.draft == "reprune" and draft is None:
                 raise ValueError(
-                    "engine='spec' needs a draft tier: pass draft="
-                    "spec.draft_serving(cfg, sp, draft_sparsity)")
+                    "engine='spec' with the reprune family needs a draft "
+                    "tier: pass draft=spec.draft_serving(cfg, sp, "
+                    "draft_sparsity)")
+            if self.spec.draft == "layerskip" and draft is not None:
+                raise ValueError(
+                    "the layerskip family drafts with a sublayer subset of "
+                    "the TARGET envelope - there is no draft packing; drop "
+                    "the draft= argument (or pick draft='reprune')")
             if self.scfg.temperature > 0.0:
                 raise ValueError(
                     "engine='spec' is greedy-only (temperature=0): the "
                     "accept rule matches draft tokens against the target's "
                     "argmaxes, which is exact only for greedy decode")
-            self.spec = spec if spec is not None else spec_mod.SpecConfig()
             self._params = spec_mod.SpecParams.build(sp, draft)
             self._prefill = jax.jit(stacked.prefill_last,
                                     static_argnames=("cfg",))
             self._verify = jax.jit(stacked.verify_step,
                                    static_argnames=("cfg",),
                                    donate_argnums=donate)
-            self._draft_propose = jax.jit(spec_mod.draft_propose,
-                                          static_argnames=("cfg", "k"),
-                                          donate_argnums=donate)
+            if self.spec.draft == "layerskip":
+                # sublayer masks, ranked by the packed envelope's own nnz:
+                # sublayers the compression already killed are dropped first
+                # (skipping them cannot change a logit)
+                imp = spec_mod.sublayer_importance(self._params.target)
+                attn_on, mlp_on = spec_mod.layerskip_masks(
+                    cfg.n_layers, self.spec.keep, importance=imp)
+                self.spec_masks = (attn_on, mlp_on)
+                self._attn_on = jnp.asarray(attn_on, jnp.float32)
+                self._mlp_on = jnp.asarray(mlp_on, jnp.float32)
+                self._draft_propose = jax.jit(
+                    spec_mod.draft_propose_layerskip,
+                    static_argnames=("cfg", "k"), donate_argnums=donate)
+            else:
+                self.spec_masks = None
+                self._draft_propose = jax.jit(spec_mod.draft_propose,
+                                              static_argnames=("cfg", "k"),
+                                              donate_argnums=donate)
         elif engine == "scan":
             self._params = stacked.stack(sp)
             self._prefill = jax.jit(stacked.prefill_last,
@@ -360,11 +385,12 @@ class BatchServer:
                                          jnp.asarray(tlen, jnp.int32),
                                          cfg=self.cfg)
             kv.write_prefill(i, k[:, 0], v[:, 0], tlen)
-            if self.spec is not None:
-                # draft-tier prefill: keeps the draft cache in lockstep with
-                # the target from the first decode step (its logits are
-                # unused - the first emitted token is the TARGET's, like
-                # any engine)
+            if self.spec is not None and self._params.draft is not None:
+                # reprune draft-tier prefill: keeps the draft cache in
+                # lockstep with the target from the first decode step (its
+                # logits are unused - the first emitted token is the
+                # TARGET's, like any engine). The layerskip family has no
+                # draft cache: its draft reads the target's own KV.
                 _, kd, vd = self._prefill(self._params.draft,
                                           jnp.asarray(toks),
                                           jnp.asarray(tlen, jnp.int32),
@@ -378,6 +404,11 @@ class BatchServer:
             nf = tlen // bs
             if nf:
                 self._trie.insert(req.prompt[: nf * bs], kv.tables[i][:nf])
+        if self.spec is not None and self.spec.adaptive_k:
+            self._adaptive[i] = spec_mod.AdaptiveK(
+                k_max=self.spec.k, ewma=self.spec.ewma,
+                collapse_below=self.spec.collapse_below,
+                expand_above=self.spec.expand_above)
         tok = int(self._sample_row(logits, key)[0])
         now = self._now()
         return Slot(req=req, pos=tlen, next_token=tok, out=[tok],
@@ -412,9 +443,9 @@ class BatchServer:
                                       pos, toks, cfg=self.cfg)
         ks, vs = np.asarray(ks), np.asarray(vs)
         kv.write_run(i, m, ks[:, 0, :t], vs[:, 0, :t])
-        if self.spec is not None:
-            # draft tier: same suffix pass over the tier-1 views, so the
-            # draft cache stays in lockstep from the first spec round
+        if self.spec is not None and self._params.draft is not None:
+            # reprune draft tier: same suffix pass over the tier-1 views, so
+            # the draft cache stays in lockstep from the first spec round
             dk, dv = kv.gather(nv, tier=1, slots=[i])
             _, kd, vd = self._verify(self._params.draft,
                                      dk, dv,
@@ -466,31 +497,54 @@ class BatchServer:
             sampled = self._sample_row(logits, key)
         return [(i, [int(sampled[i])]) for i in active]
 
+    def _round_k(self, active: List[int]) -> int:
+        """This round's draft length: the MAX of the active slots' adaptive
+        k (one mispredicting slot can therefore never drag the whole batch
+        down to its collapsed k - it just stops accepting, while the batch
+        keeps drafting for the slots that do), or the static spec.k with
+        adaptation off. The doubling ladder keeps the set of distinct round
+        shapes - and thus jit recompiles - at O(log k_max)."""
+        if not self.spec.adaptive_k:
+            return self.spec.k
+        return max(self._adaptive[i].k for i in active)
+
     def _spec_step(self, slots: List[Optional[Slot]], kv: PagedKVCache,
                    active: List[int]) -> List[tuple]:
         """One draft-k-verify speculative round over all slots.
 
-        The jitted draft loop proposes ``k`` tokens per row over the
-        draft-tier views; ONE batched multi-token ``verify_step`` scores
-        the pending token plus the whole draft run on the target tier. Per
-        slot, the longest prefix of the draft run matching the target's own
-        greedy argmaxes is accepted, plus the target's correction token -
-        so the emitted stream is bit-identical to target-only greedy
-        decode. Only the accepted entries of BOTH tiers' candidate KV are
-        committed (``write_run``); rejected draft KV never reaches the
+        The jitted draft loop proposes ``k`` tokens per row - the reprune
+        family over its own higher-sparsity tier-1 views, the layerskip
+        family by early-exit over the TARGET's envelope and tier-0 views;
+        ONE batched multi-token ``verify_step`` scores the pending token
+        plus the whole draft run on the target tier. Per slot, the longest
+        prefix of the draft run matching the target's own greedy argmaxes
+        is accepted, plus the target's correction token - so the emitted
+        stream is bit-identical to target-only greedy decode. Only the
+        accepted entries of the candidate KV are committed (``write_run``;
+        both tiers for reprune, target-only for layerskip - its draft
+        writes nothing anywhere); rejected draft KV never reaches the
         pool - that is the rollback. Returns [(slot index, tokens), ...]
         with 1..k+1 tokens per slot."""
         t_round = time.monotonic()
-        k = self.spec.k
+        k = self._round_k(active)
+        layerskip = self._params.draft is None
         pos_np = np.array([s.pos if s else 0 for s in slots], np.int32)
         toks = np.array([[s.next_token if s else 0] for s in slots],
                         np.int32)
         pos = jnp.asarray(pos_np)
         with self._phase("spec.draft", k=k, n_active=len(active)):
-            dk, dv = self._gather_views(slots, kv, active, k, tier=1)
-            props, d_ks, d_vs = self._draft_propose(
-                self._params.draft, dk, dv, pos, jnp.asarray(toks),
-                cfg=self.cfg, k=k)
+            if layerskip:
+                dk, dv = self._gather_views(slots, kv, active, k, tier=0)
+                props = self._draft_propose(
+                    self._params.target, dk, dv, pos, jnp.asarray(toks),
+                    cfg=self.cfg, k=k, attn_on=self._attn_on,
+                    mlp_on=self._mlp_on)
+                d_ks = d_vs = None
+            else:
+                dk, dv = self._gather_views(slots, kv, active, k, tier=1)
+                props, d_ks, d_vs = self._draft_propose(
+                    self._params.draft, dk, dv, pos, jnp.asarray(toks),
+                    cfg=self.cfg, k=k)
             # fencing props is ~free (the verify consumes them immediately)
             # and makes the draft/verify wall-time split honest
             props = jax.block_until_ready(props)
@@ -505,7 +559,8 @@ class BatchServer:
         t_verify = time.monotonic()
         with self._phase("spec.commit"):
             props_np = np.asarray(props)
-            d_ks, d_vs = np.asarray(d_ks), np.asarray(d_vs)
+            if not layerskip:
+                d_ks, d_vs = np.asarray(d_ks), np.asarray(d_vs)
             t_ks, t_vs = np.asarray(t_ks), np.asarray(t_vs)
             runs = []
             for i in active:
@@ -519,9 +574,31 @@ class BatchServer:
                     emitted = emitted[: emitted.index(self.scfg.eos_id) + 1]
                 e = len(emitted)
                 kv.write_run(i, s.pos, t_ks[:, i, :e], t_vs[:, i, :e], tier=0)
-                kv.write_run(i, s.pos, d_ks[:, i, :e], d_vs[:, i, :e], tier=1)
-                self._spec_stats.record(n_accepted=min(a, e - 1), n_emitted=e)
+                if not layerskip:
+                    kv.write_run(i, s.pos, d_ks[:, i, :e], d_vs[:, i, :e],
+                                 tier=1)
+                self._spec_stats.record(n_proposed=k,
+                                        n_accepted=min(a, e - 1),
+                                        n_emitted=e)
+                if self.spec.adaptive_k:
+                    # the tracker sees the RAW agreement a/k (not the
+                    # budget/EOS-capped commit count): end-of-request
+                    # truncation says nothing about draft quality
+                    ad = self._adaptive[i]
+                    k_was = ad.k
+                    ad.observe(n_proposed=k, n_accepted=a)
+                    if ad.k < k_was:
+                        self._spec_stats.k_collapses += 1
+                        if self._obs:
+                            self.metrics.counter("spec_k_collapses").inc()
+                    elif ad.k > k_was:
+                        self._spec_stats.k_expands += 1
                 runs.append((i, emitted))
+                if self._obs:
+                    self.metrics.counter("spec_accepted_tokens").inc(
+                        min(a, e - 1))
+                    self.metrics.counter("spec_rejected_tokens").inc(
+                        k - min(a, e - 1))
         self._spec_stats.draft_s.append(t_draft - t_round)
         self._spec_stats.verify_s.append(t_verify - t_draft)
         self._spec_stats.round_s.append(time.monotonic() - t_round)
@@ -532,7 +609,11 @@ class BatchServer:
         q = RequestQueue(requests)
         kv = PagedKVCache(cfg, bcfg.n_slots, bcfg.n_blocks * self._kv_scale,
                           bcfg.block_size, mesh=self.mesh,
-                          tiers=2 if self.spec is not None else 1)
+                          # only the reprune family keeps a second KV tier;
+                          # the layerskip draft reads the target's own cache
+                          tiers=2 if (self.spec is not None
+                                      and self._params.draft is not None)
+                          else 1)
         slots: List[Optional[Slot]] = [None] * bcfg.n_slots
         # the trie lives per run() so traces are independent (and warmup
         # runs never warm the cache of a timed run)
@@ -546,8 +627,13 @@ class BatchServer:
         key = jax.random.PRNGKey(scfg.seed)
         n_steps = 0
         self._spec_stats = (spec_mod.SpecStats(self.spec.k,
-                                               self.spec.draft_sparsity)
+                                               self.spec.draft_sparsity,
+                                               family=self.spec.draft,
+                                               keep=self.spec.keep)
                             if self.spec is not None else None)
+        # per-slot adaptive-k trackers, created at admission and dropped
+        # with the slot (a new request starts from the optimistic prior)
+        self._adaptive: Dict[int, spec_mod.AdaptiveK] = {}
         self._t0 = time.monotonic()
 
         def finish(i: int) -> None:
@@ -575,6 +661,7 @@ class BatchServer:
             self.metrics.counter("requests_finished").inc()
             kv.free_slot(i)
             slots[i] = None
+            self._adaptive.pop(i, None)
 
         while len(q) or any(s is not None for s in slots):
             key, k_adm, k_dec = jax.random.split(key, 3)

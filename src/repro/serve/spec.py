@@ -46,21 +46,63 @@ from . import deployed as DP
 from . import stacked as ST
 
 
+DRAFT_FAMILIES = ("reprune", "layerskip")
+
+
 @dataclasses.dataclass(frozen=True)
 class SpecConfig:
-    """Speculative-decode knobs. ``k`` draft tokens are proposed per
-    verify; ``draft_sparsity`` is the draft tier's block-pruning target
-    (``sched.search.search_spec`` picks both from the simulated
-    reload+compute cost)."""
+    """Speculative-decode knobs.
+
+    ``k`` draft tokens are proposed per verify. The ``draft`` family picks
+    HOW the draft tier is built from the same weights:
+
+      * ``"reprune"``  - a second, higher-sparsity BSR packing
+        (:func:`draft_serving`); ``draft_sparsity`` is its pruning target;
+      * ``"layerskip"`` - a sublayer-subset ``lax.scan`` over the TARGET's
+        own stacked envelope (no second packing, no extra weight memory,
+        no draft KV tier); ``keep`` is the fraction of sublayer units
+        (attention/MLP, 2 per layer) the draft executes -
+        :func:`layerskip_masks` drops the least-important units first,
+        ranked by the packed envelope's own per-layer nnz.
+
+    ``adaptive_k`` turns on the per-slot EWMA acceptance tracker
+    (:class:`AdaptiveK`): a slot whose smoothed acceptance falls below
+    ``collapse_below`` collapses its k to 1 (draft cost ~ 0) and re-expands
+    through a doubling ladder once it recovers past ``expand_above``.
+    ``sched.search.search_spec`` picks (family, k, knob) from the
+    simulated cost and the calibrated acceptance prior."""
 
     k: int = 4
     draft_sparsity: float = 0.9
+    draft: str = "reprune"
+    keep: float = 0.5
+    adaptive_k: bool = True
+    ewma: float = 0.35
+    collapse_below: float = 0.2
+    expand_above: float = 0.6
 
     def __post_init__(self):
         if self.k < 1:
             raise ValueError("spec: k must be >= 1")
         if not 0.0 <= self.draft_sparsity < 1.0:
             raise ValueError("spec: draft_sparsity must be in [0, 1)")
+        if self.draft not in DRAFT_FAMILIES:
+            raise ValueError(
+                f"spec: draft must be one of {DRAFT_FAMILIES}, "
+                f"got {self.draft!r}")
+        if not 0.0 < self.keep <= 1.0:
+            raise ValueError("spec: keep must be in (0, 1]")
+        if not 0.0 < self.ewma <= 1.0:
+            raise ValueError("spec: ewma must be in (0, 1]")
+        if not (0.0 <= self.collapse_below <= self.expand_above <= 1.0):
+            raise ValueError(
+                "spec: need 0 <= collapse_below <= expand_above <= 1 "
+                "(the hysteresis band)")
+
+    @property
+    def knob(self) -> float:
+        """The family's draft knob: re-prune sparsity or layer-skip keep."""
+        return self.draft_sparsity if self.draft == "reprune" else self.keep
 
 
 @dataclasses.dataclass
@@ -72,9 +114,13 @@ class SpecParams:
     caches."""
 
     target: ST.StackedParams
-    draft: ST.StackedParams
+    draft: Optional[ST.StackedParams] = None  # None: layerskip family
+    # (the draft IS a sublayer subset of the target envelope - no second
+    # packing and no draft KV tier exist)
 
     def __post_init__(self):
+        if self.draft is None:
+            return
         if self.target.n_layers != self.draft.n_layers:
             raise ValueError(
                 f"spec: target has {self.target.n_layers} layers, draft "
@@ -89,9 +135,12 @@ class SpecParams:
 
     @classmethod
     def build(cls, target_sp: DP.ServingParams,
-              draft_sp: DP.ServingParams) -> "SpecParams":
-        """Stack both tiers' ServingParams into the compiled envelopes."""
-        return cls(target=ST.stack(target_sp), draft=ST.stack(draft_sp))
+              draft_sp: Optional[DP.ServingParams] = None) -> "SpecParams":
+        """Stack both tiers' ServingParams into the compiled envelopes
+        (``draft_sp=None`` for the layer-skip family: one envelope serves
+        both roles)."""
+        return cls(target=ST.stack(target_sp),
+                   draft=ST.stack(draft_sp) if draft_sp is not None else None)
 
 
 jax.tree_util.register_pytree_node(
@@ -189,6 +238,139 @@ def draft_serving(cfg: ModelConfig, sp: DP.ServingParams,
 
 
 # ---------------------------------------------------------------------------
+# Layer-skip draft family: a sublayer subset of the TARGET's own envelope
+# ---------------------------------------------------------------------------
+
+
+def _block_set(sw: D.StackedWeight, li: int) -> set:
+    """The set of live (block-row, block-col) coordinates of layer ``li``
+    in a stacked envelope (host-side)."""
+    nnz = np.asarray(sw.nnz[li])
+    ri = np.asarray(sw.row_idx[li])
+    return {(int(ri[g, s]), g)
+            for g in range(nnz.shape[0]) for s in range(int(nnz[g]))}
+
+
+def _proj_nnz(sxp: ST.StackedParams, name: str, li: int) -> Optional[int]:
+    sw = sxp.packed.get(name)
+    if sw is None:
+        return None  # dense-serving projection: never counts as prunable
+    return int(np.asarray(sw.nnz[li]).sum())
+
+
+def sublayer_importance(sxp: ST.StackedParams
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-sublayer liveness score from the packed envelope's own nnz.
+
+    CIM-aware pruning can kill a whole sublayer: attention is dead when any
+    serial member (q/k/v/o) lost every block (v=0 makes the weighted sum 0
+    no matter the scores), and a gated MLP is dead when the gate and up
+    projections keep DISJOINT block supports (``silu(0)*u = g*0 = 0``
+    elementwise) or the down projection is empty. The score is the min
+    live-block count along each sublayer's serial chain - 0 means skipping
+    it cannot change a single logit, so the layer-skip draft drops it for
+    free. Dense (un-packed) members are treated as fully live.
+
+    Returns (attn (L,), mlp (L,)) float arrays."""
+    L = sxp.n_layers
+    attn = np.full(L, np.inf)
+    mlp = np.full(L, np.inf)
+    for li in range(L):
+        serial = [_proj_nnz(sxp, n, li) for n in ("wq", "wk", "wv", "wo")]
+        live = [s for s in serial if s is not None]
+        if live:
+            attn[li] = float(min(live))
+        gate, up = sxp.packed.get("w_gate"), sxp.packed.get("w_up")
+        parts = []
+        if gate is not None and up is not None:
+            parts.append(len(_block_set(gate, li) & _block_set(up, li)))
+        elif up is not None:
+            parts.append(int(np.asarray(up.nnz[li]).sum()))
+        down = _proj_nnz(sxp, "w_down", li)
+        if down is not None:
+            parts.append(down)
+        if parts:
+            mlp[li] = float(min(parts))
+    return attn, mlp
+
+
+def layerskip_masks(n_layers: int, keep: float,
+                    importance: Optional[Tuple[np.ndarray, np.ndarray]] = None
+                    ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Pick which sublayers the layer-skip draft executes.
+
+    ``keep`` is the fraction of the 2L sublayer units (one attention + one
+    MLP per layer) kept; at least one unit always survives, and the LAST
+    layer's attention is never dropped (the draft should still read the
+    newest context even when an nnz ranking calls it cheap). Units are
+    dropped least-important-first: ``importance`` is
+    (:func:`sublayer_importance`'s) (attn, mlp) score pair - dead sublayers
+    (score 0) go first, so on aggressively-compressed packings the draft
+    sheds exactly the compute the pruning already killed. Without a score,
+    the positional prior drops MLPs front-first, then attentions
+    front-first (early-exit shape).
+
+    Returns (attn_on, mlp_on) 0/1 tuples of length ``n_layers``."""
+    L = n_layers
+    n_keep = min(2 * L, max(1, int(round(keep * 2 * L))))
+    if importance is None:
+        attn_imp = np.asarray([2.0 + li / L for li in range(L)])
+        mlp_imp = np.asarray([1.0 + li / L for li in range(L)])
+    else:
+        attn_imp, mlp_imp = (np.asarray(importance[0], np.float64),
+                             np.asarray(importance[1], np.float64))
+    # (importance, position) sort: least important first, earlier layers
+    # break ties (their outputs get re-derived by more surviving layers)
+    units = [(mlp_imp[li], li, "mlp", li) for li in range(L)]
+    units += [(attn_imp[li], li, "attn", li) for li in range(L - 1)]
+    units.sort(key=lambda u: (u[0], u[1]))
+    attn_on = [1] * L
+    mlp_on = [1] * L
+    for imp, _, kind, li in units[: max(0, 2 * L - n_keep)]:
+        (attn_on if kind == "attn" else mlp_on)[li] = 0
+    return tuple(attn_on), tuple(mlp_on)
+
+
+def kept_fraction(attn_on: Tuple[int, ...], mlp_on: Tuple[int, ...]) -> float:
+    """Fraction of sublayer units the masks execute - the layer-skip
+    draft's per-step cost relative to a full target step (the quantity
+    ``perf_model.speculative_summary`` prices the draft with)."""
+    total = len(attn_on) + len(mlp_on)
+    return (sum(attn_on) + sum(mlp_on)) / max(total, 1)
+
+
+def draft_propose_layerskip(target: ST.StackedParams, views_k: jnp.ndarray,
+                            views_v: jnp.ndarray, pos: jnp.ndarray,
+                            tokens: jnp.ndarray, cfg: ModelConfig, k: int,
+                            attn_on: jnp.ndarray, mlp_on: jnp.ndarray):
+    """Greedy-propose ``k`` tokens by early-exit over the target's layers.
+
+    Runs ``k`` masked decode steps (``stacked.decode_step_masked``) over
+    the TARGET envelope and the TARGET's own committed KV views - the
+    layer-skip family has no draft weights and no draft KV tier. In-flight
+    KV for the stepped positions is carried through the gathered views and
+    thrown away with them: the verify pass recomputes exact target KV for
+    every emitted position, so nothing here is ever committed (which is
+    also why only ``k`` steps run - there is no trailing KV-fill step to
+    keep a second cache in lockstep).
+
+    Returns proposals (B, k) int32."""
+    b = tokens.shape[0]
+    rows = jnp.arange(b)
+    props = []
+    tok = tokens  # (B, 1): each row's pending input token
+    for t in range(k):
+        logits, ks, vs = ST.decode_step_masked(target, views_k, views_v,
+                                               pos + t, tok, cfg,
+                                               attn_on, mlp_on)
+        views_k = views_k.at[:, rows, pos + t].set(ks)
+        views_v = views_v.at[:, rows, pos + t].set(vs)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        props.append(tok[:, 0])
+    return jnp.stack(props, axis=1)
+
+
+# ---------------------------------------------------------------------------
 # The jitted draft loop: k greedy proposals with the scan runtime
 # ---------------------------------------------------------------------------
 
@@ -237,6 +419,56 @@ def accept_greedy(proposals: np.ndarray, targets: np.ndarray) -> int:
 
 
 @dataclasses.dataclass
+class AdaptiveK:
+    """Per-slot EWMA acceptance tracker with collapse/recovery hysteresis.
+
+    Every round :meth:`observe` folds the slot's measured acceptance into
+    an EWMA (``ewma`` is the newest round's weight). When the smoothed rate
+    falls below ``collapse_below`` the slot's k COLLAPSES to 1 - one draft
+    step per round, so a mispredicting slot pays nearly nothing while still
+    sampling acceptance every round (that one proposal is the probe that
+    makes recovery observable). When the rate recovers past
+    ``expand_above`` the k re-expands through a doubling ladder
+    (1 -> 2 -> 4 -> ... -> k_max), so jit sees O(log k_max) distinct round
+    shapes, not a new one per round. Between the thresholds k holds - the
+    hysteresis band keeps a borderline slot from thrashing compilations.
+
+    The tracker only modulates HOW MANY tokens are drafted; acceptance
+    itself stays the greedy-exact rule, so emitted tokens are bit-identical
+    at every k trajectory."""
+
+    k_max: int
+    ewma: float = 0.35
+    collapse_below: float = 0.2
+    expand_above: float = 0.6
+    acc: float = dataclasses.field(init=False)
+    k: int = dataclasses.field(init=False)
+    collapses: int = 0
+    expands: int = 0
+
+    def __post_init__(self):
+        # optimistic start: at the expand threshold with k wide open - the
+        # first rounds measure, and a genuinely bad draft collapses within
+        # ~log(collapse_below/expand_above)/log(1-ewma) rounds
+        self.acc = self.expand_above
+        self.k = self.k_max
+
+    def observe(self, n_proposed: int, n_accepted: int) -> int:
+        """Fold one round's (proposed, accepted) in; returns the slot's
+        NEXT round k."""
+        if n_proposed > 0:
+            rate = n_accepted / n_proposed
+            self.acc += self.ewma * (rate - self.acc)
+        if self.k > 1 and self.acc < self.collapse_below:
+            self.k = 1
+            self.collapses += 1
+        elif self.k < self.k_max and self.acc >= self.expand_above:
+            self.k = min(self.k_max, self.k * 2)
+            self.expands += 1
+        return self.k
+
+
+@dataclasses.dataclass
 class SpecStats:
     """Host-side acceptance + round-latency telemetry over a serve run.
 
@@ -247,15 +479,23 @@ class SpecStats:
 
     ``record`` is called once per ACTIVE SLOT of a round: ``slot_rounds``
     / ``proposed`` / ``accepted`` count slot-rounds (a round over B active
-    slots proposes B*k draft tokens), while ``len(round_s)`` counts the
-    batched rounds themselves."""
+    slots at round-k k proposes B*k draft tokens), while ``len(round_s)``
+    counts the batched rounds themselves. With adaptive k the per-round
+    proposal count varies, so ``record`` takes it explicitly;
+    ``accept_hist`` buckets the accepted-prefix length per slot-round
+    (index a = rounds whose first a proposals all matched)."""
 
     k: int
     draft_sparsity: float
+    family: str = "reprune"
+    keep: float = 1.0
     slot_rounds: int = 0
     proposed: int = 0
     accepted: int = 0
     emitted: int = 0
+    k_collapses: int = 0
+    k_expands: int = 0
+    accept_hist: dict = dataclasses.field(default_factory=dict)
     round_s: list = dataclasses.field(default_factory=list)
     # per-round sub-phases: draft_s covers the draft-tier gather + k-token
     # propose (fenced on the proposals), verify_s the target gather + one
@@ -264,11 +504,13 @@ class SpecStats:
     draft_s: list = dataclasses.field(default_factory=list)
     verify_s: list = dataclasses.field(default_factory=list)
 
-    def record(self, n_accepted: int, n_emitted: int) -> None:
+    def record(self, n_proposed: int, n_accepted: int,
+               n_emitted: int) -> None:
         self.slot_rounds += 1
-        self.proposed += self.k
+        self.proposed += n_proposed
         self.accepted += n_accepted
         self.emitted += n_emitted
+        self.accept_hist[n_accepted] = self.accept_hist.get(n_accepted, 0) + 1
 
     @property
     def acceptance_rate(self) -> float:
@@ -288,13 +530,26 @@ class SpecStats:
                    if self.round_s else 0.0)
         out = {
             "k": self.k,
+            "family": self.family,
             "draft_sparsity": self.draft_sparsity,
+            "keep": self.keep,
             "n_rounds": len(self.round_s),  # batched draft+verify rounds
             "slot_rounds": self.slot_rounds,  # per-active-slot lanes
             "proposed": self.proposed,
             "accepted": self.accepted,
             "acceptance_rate": round(self.acceptance_rate, 4),
             "tokens_per_verify": round(self.tokens_per_verify, 3),
+            # the per-family obs counters, mirrored here so un-instrumented
+            # runs still report them
+            "spec_accepted_tokens": self.accepted,
+            "spec_rejected_tokens": self.proposed - self.accepted,
+            "spec_k_collapses": self.k_collapses,
+            "spec_k_expands": self.k_expands,
+            # accepted-prefix-length histogram: list index a = slot-rounds
+            # whose first a proposals all matched the target
+            "accepted_len_hist": [
+                self.accept_hist.get(a, 0)
+                for a in range(max(self.accept_hist, default=0) + 1)],
             "round_p50_ms": round(self.round_p50_s * 1e3, 3),
             "ms_per_token_p50": round(per_tok * 1e3, 3),
         }

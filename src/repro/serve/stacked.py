@@ -235,6 +235,60 @@ def decode_step_paged(sxp: StackedParams, views_k: jnp.ndarray,
     return logits, ks, vs
 
 
+def decode_step_masked(sxp: StackedParams, views_k: jnp.ndarray,
+                       views_v: jnp.ndarray, pos: jnp.ndarray,
+                       tokens: jnp.ndarray, cfg: ModelConfig,
+                       attn_on: jnp.ndarray, mlp_on: jnp.ndarray):
+    """One decode step over a SUBLAYER SUBSET of the same stacked envelope.
+
+    ``attn_on`` / ``mlp_on`` are (L,) 0/1 masks scanned alongside the layer
+    index: a masked-off sublayer is skipped with ``lax.cond`` - the branch
+    genuinely elides the BSR matmuls (HLO conditional, not a multiply-by-
+    zero), so a layer-skip draft really costs ~``keep`` of a target step.
+    This is the layer-skip speculative draft's forward: the SAME
+    StackedWeight envelope, no second packing, no extra weight memory -
+    PR 4's layer-indexed kernel makes any layer subset addressable for
+    free. Skipped-attention layers return zero KV rows; nothing ever reads
+    them (a layer whose attention is off never attends), and draft KV is
+    never committed to the pool anyway.
+
+    Same signature/returns as :func:`decode_step_paged` plus the masks."""
+    x = L.embed(sxp.embed, tokens, cfg.param_dtype)
+
+    def body(x, xs):
+        li, p_dense, w, t, kview, vview, a_on, m_on = xs
+        p = _layer_view(sxp, p_dense, li)
+        cfg_l = transformer._with_theta(cfg, t)
+
+        def run_attn(args):
+            x, kview, vview = args
+            h = L.rmsnorm(x, p["ln1"])
+            attn, kn, vn = L.decode_attention_multi(p, h, kview, vview, pos,
+                                                    cfg_l, window=w)
+            return x + attn, kn[:, 0], vn[:, 0]
+
+        def skip_attn(args):
+            x, kview, _ = args
+            z = jnp.zeros_like(kview[:, 0])
+            return x, z, z
+
+        x, kn, vn = jax.lax.cond(a_on > 0, run_attn, skip_attn,
+                                 (x, kview, vview))
+
+        def run_mlp(x):
+            h = L.rmsnorm(x, p["ln2"])
+            return x + DP._mlp(p, h, cfg)
+
+        x = jax.lax.cond(m_on > 0, run_mlp, lambda x: x, x)
+        return x, (kn, vn)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, _scan_xs(sxp, cfg, views_k, views_v, attn_on, mlp_on))
+    x = L.rmsnorm(x, sxp.final_ln)
+    logits = L.logits_out(_head(sxp), x, cfg.cim)[:, 0, : cfg.vocab]
+    return logits, ks, vs
+
+
 # MLP over (B, T, D) with sequential-decode semantics per token - one
 # source of truth, shared with the loop runtime (docstring there)
 _mlp_tokenwise = DP._mlp_tokenwise

@@ -443,13 +443,20 @@ def test_search_spec_picks_simulated_best(qat_model):
     from repro.sched import search_spec
     cfg, _ = qat_model
     res = search_spec(cfg, target_sparsity=0.6,
-                      draft_sparsities=(0.8, 0.9), ks=(2, 4))
-    assert len(res.table) == 4
+                      draft_sparsities=(0.8, 0.9), ks=(2, 4),
+                      keeps=(0.5,))
+    # (2 reprune sparsities + 1 layerskip keep) x 2 ks
+    assert len(res.table) == 6
+    assert {r["family"] for r in res.table} == {"reprune", "layerskip"}
     best = max(res.table, key=lambda r: r["tokens_per_kcycle"])
     assert res.best == best
+    assert res.decision["verdict"] in ("spec", "declined")
     for row in res.table:
         assert row["cycles_per_round"] > 0
         assert 1.0 <= row["tokens_per_round"] <= row["k"] + 1
+        # layerskip rounds run k draft steps, reprune k+1
+        assert row["draft_steps"] == \
+            (row["k"] if row["family"] == "layerskip" else row["k"] + 1)
 
 
 # ---------------------------------------------------------------------------
@@ -478,3 +485,304 @@ def test_decode_attention_multi_t_gt_1_matches_chained(qat_model):
                                       np.asarray(yt[:, 0]), err_msg=f"t={t}")
         kc2 = kc2.at[rows, pos + t].set(kt[:, 0])
         vc2 = vc2.at[rows, pos + t].set(vt[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# Layer-skip draft family: masks, importance, bit-exactness
+# ---------------------------------------------------------------------------
+
+
+def test_decode_step_masked_all_on_matches_paged(qat_model):
+    """With every sublayer on, the masked step IS decode_step_paged -
+    bit for bit (the identity the layer-skip draft degrades from)."""
+    cfg, params = qat_model
+    sp = DP.compress(cfg, params, target_sparsity=0.5, tile=(16, 16))
+    sxp = ST.stack(sp)
+    rng = np.random.default_rng(11)
+    B, Sv, KV, dh = 2, 10, cfg.n_kv_heads_eff, cfg.dh
+    vk = jnp.asarray(rng.standard_normal((cfg.n_layers, B, Sv, KV, dh)),
+                     jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((cfg.n_layers, B, Sv, KV, dh)),
+                     jnp.float32)
+    pos = jnp.asarray([3, 6], jnp.int32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, 1)), jnp.int32)
+    ones = jnp.ones(cfg.n_layers, jnp.float32)
+    want_l, want_k, want_v = ST.decode_step_paged(sxp, vk, vv, pos, toks, cfg)
+    got_l, got_k, got_v = ST.decode_step_masked(sxp, vk, vv, pos, toks, cfg,
+                                               ones, ones)
+    np.testing.assert_array_equal(np.asarray(want_l), np.asarray(got_l))
+    np.testing.assert_array_equal(np.asarray(want_k), np.asarray(got_k))
+    np.testing.assert_array_equal(np.asarray(want_v), np.asarray(got_v))
+
+
+def test_layerskip_masks_rank_and_floor():
+    L = 4
+    # keep=1: everything on
+    a_on, m_on = SP.layerskip_masks(L, 1.0)
+    assert a_on == (1,) * L and m_on == (1,) * L
+    # positional prior drops MLPs front-first, then attentions front-first
+    a_on, m_on = SP.layerskip_masks(L, 0.5)
+    assert m_on == (0, 0, 0, 0) and a_on == (1, 1, 1, 1)
+    assert SP.kept_fraction(a_on, m_on) == 0.5
+    # the LAST layer's attention survives even the floor
+    a_on, m_on = SP.layerskip_masks(L, 0.0)
+    assert a_on[-1] == 1 and sum(a_on) + sum(m_on) == 1
+    # nnz importance overrides position: dead units (score 0) go first
+    attn_imp = np.array([5.0, 0.0, 7.0, 9.0])
+    mlp_imp = np.array([3.0, 0.0, 8.0, 6.0])
+    a_on, m_on = SP.layerskip_masks(L, 0.5, importance=(attn_imp, mlp_imp))
+    assert a_on[1] == 0 and m_on[1] == 0  # both dead units dropped
+    assert m_on[0] == 0 and a_on[0] == 0  # then the cheapest live ones
+    assert a_on[3] == 1 and m_on[2] == 1  # most important survive
+
+
+def test_sublayer_importance_detects_dead_sublayers(qat_model):
+    """On the aggressively-compressed smoke packing the nnz ranking must
+    score pruning-killed sublayers exactly 0 (skipping them is free)."""
+    cfg, params = qat_model
+    sp = DP.compress(cfg, params, target_sparsity=0.6,
+                     schedule=DP.default_schedule(cfg))
+    sxp = ST.stack(sp)
+    attn, mlp = SP.sublayer_importance(sxp)
+    assert attn.shape == (cfg.n_layers,) and mlp.shape == (cfg.n_layers,)
+    assert np.all(attn >= 0) and np.all(mlp >= 0)
+    # this packing's wk/wv lose every block -> both attentions are dead
+    assert np.all(attn == 0)
+    # masks at keep=0.5 must then shed ONLY dead/cheapest units
+    a_on, m_on = SP.layerskip_masks(cfg.n_layers, 0.5,
+                                    importance=(attn, mlp))
+    dropped = [(k, li) for k, on in (("attn", a_on), ("mlp", m_on))
+               for li, v in enumerate(on) if v == 0]
+    imp = {"attn": attn, "mlp": mlp}
+    kept_scores = [imp[k][li] for k, on in (("attn", a_on), ("mlp", m_on))
+                   for li, v in enumerate(on) if v == 1]
+    assert all(imp[k][li] <= min(kept_scores) for k, li in dropped)
+
+
+def test_layerskip_spec_matches_scan(qat_model):
+    """Greedy bit-exactness for the layerskip family: no draft packing,
+    the draft runs a sublayer subset of the TARGET envelope."""
+    cfg, params = qat_model
+    sp = DP.compress(cfg, params, target_sparsity=0.6,
+                     schedule=DP.default_schedule(cfg))
+    bcfg = BatchConfig(**_BCFG)
+    want = BatchServer(cfg, sp, ServeConfig(), bcfg, engine="scan"
+                       ).run(_trace(cfg))
+    srv = BatchServer(cfg, sp, ServeConfig(), bcfg, engine="spec",
+                      spec=SpecConfig(k=3, draft="layerskip", keep=0.5))
+    rep = srv.run(_trace(cfg))
+    for r in _trace(cfg):
+        np.testing.assert_array_equal(rep.outputs[r.rid],
+                                      want.outputs[r.rid], err_msg=r.rid)
+    st = rep.spec
+    assert st["family"] == "layerskip" and st["keep"] == 0.5
+    # the nnz masks shed the dead sublayers -> the draft actually agrees
+    assert st["acceptance_rate"] >= 0.3
+    assert sum(st["accepted_len_hist"]) == st["slot_rounds"]
+
+
+def test_layerskip_spec_matches_scan_macro2():
+    """Layerskip spec decode over a macro-sharded TARGET envelope (the
+    draft shares it - nothing extra to shard) reproduces single-device
+    target-only tokens at mesh macro=2 (subprocess: forced host devices
+    must exist before jax imports)."""
+    import os
+    import subprocess
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = " ".join(
+        ([env["XLA_FLAGS"]] if env.get("XLA_FLAGS") else [])
+        + ["--xla_force_host_platform_device_count=8"])
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = """
+import numpy as np, jax
+from repro.models import registry
+from repro.serve import BatchConfig, BatchServer, ServeConfig, Request, SpecConfig
+from repro.serve import deployed as DP
+from repro.launch.shardings import macro_mesh
+
+cfg = registry.get_smoke_config("yi-6b", dtype="float32", cim_mode="qat")
+params = registry.model_fns(cfg).init_params(cfg, jax.random.PRNGKey(0))
+def trace():
+    rng = np.random.default_rng(7)
+    return [Request(f"r{i}", rng.integers(0, cfg.vocab, int(rng.integers(2, 10))),
+                    int(rng.integers(1, 7))) for i in range(3)]
+sp = DP.compress(cfg, params, target_sparsity=0.5, tile=(16, 16))
+bcfg = BatchConfig(n_slots=2, block_size=4, n_blocks=24)
+want = BatchServer(cfg, sp, ServeConfig(), bcfg, engine="scan").run(trace())
+mesh = macro_mesh(2)
+srv = BatchServer(cfg, DP.shard(sp, mesh), ServeConfig(), bcfg, mesh=mesh,
+                  engine="spec", spec=SpecConfig(k=3, draft="layerskip", keep=0.5))
+assert any(sw.mesh is not None for sw in srv._params.target.packed.values()), \\
+    "no target envelope actually sharded"
+assert srv._params.draft is None, "layerskip must not carry a draft packing"
+rep = srv.run(trace())
+for r in trace():
+    np.testing.assert_array_equal(rep.outputs[r.rid], want.outputs[r.rid],
+                                  err_msg=f"macro=2 {r.rid}")
+print("OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=repo, timeout=420)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "OK" in r.stdout
+
+
+def test_layerskip_server_rejects_draft(qat_model):
+    cfg, params = qat_model
+    sp = DP.compress(cfg, params, target_sparsity=0.5, tile=(16, 16))
+    with pytest.raises(ValueError, match="layerskip"):
+        BatchServer(cfg, sp, ServeConfig(), BatchConfig(**_BCFG),
+                    engine="spec", draft=sp,
+                    spec=SpecConfig(k=2, draft="layerskip", keep=0.5))
+
+
+# ---------------------------------------------------------------------------
+# Adaptive k: collapse / recovery state machine
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_k_collapse_and_recovery():
+    ad = SP.AdaptiveK(k_max=4, ewma=0.5, collapse_below=0.2,
+                      expand_above=0.6)
+    assert ad.k == 4 and ad.acc == pytest.approx(0.6)  # optimistic start
+    assert ad.observe(4, 0) == 4          # acc 0.30: in the band, hold
+    assert ad.observe(4, 0) == 1          # acc 0.15 < 0.2: COLLAPSE
+    assert ad.collapses == 1
+    # recovery through the doubling ladder on perfect probe acceptance
+    assert ad.observe(1, 1) == 1          # acc 0.575: still below expand
+    assert ad.observe(1, 1) == 2          # acc 0.7875 >= 0.6: 1 -> 2
+    assert ad.observe(2, 2) == 4          # 2 -> 4 (capped at k_max)
+    assert ad.expands == 2 and ad.k == 4
+    assert ad.observe(4, 4) == 4          # at k_max: no further expand
+    assert ad.expands == 2
+
+
+def test_adaptive_k_hysteresis_band_holds():
+    ad = SP.AdaptiveK(k_max=8, ewma=0.35, collapse_below=0.2,
+                      expand_above=0.6)
+    ad.observe(8, 0)  # knock acc below expand_above
+    k0, c0, e0 = ad.k, ad.collapses, ad.expands
+    for _ in range(20):
+        assert ad.observe(k0, int(0.4 * k0)) == k0  # borderline slot
+    assert ad.collapses == c0 and ad.expands == e0
+
+
+def test_adaptive_k_collapses_in_server(qat_model):
+    """A mismatched layerskip draft (positional masks on a packing whose
+    live compute is elsewhere) must drive per-slot k down; greedy tokens
+    stay bit-identical through every k trajectory."""
+    cfg, params = qat_model
+    sp = DP.compress(cfg, params, target_sparsity=0.6,
+                     schedule=DP.default_schedule(cfg))
+    bcfg = BatchConfig(**_BCFG)
+    want = BatchServer(cfg, sp, ServeConfig(), bcfg, engine="scan"
+                       ).run(_trace(cfg))
+    srv = BatchServer(cfg, sp, ServeConfig(), bcfg, engine="spec",
+                      spec=SpecConfig(k=4, draft="layerskip", keep=0.25))
+    # keep=0.25 with nnz masks keeps only the live layer-0 MLP path's
+    # cheapest units - force the POSITIONAL prior instead so the draft
+    # mispredicts and the tracker must collapse
+    import jax.numpy as jnp2
+    a_on, m_on = SP.layerskip_masks(cfg.n_layers, 0.25)
+    srv.spec_masks = (a_on, m_on)
+    srv._attn_on = jnp2.asarray(a_on, jnp2.float32)
+    srv._mlp_on = jnp2.asarray(m_on, jnp2.float32)
+    rep = srv.run(_trace(cfg))
+    for r in _trace(cfg):
+        np.testing.assert_array_equal(rep.outputs[r.rid],
+                                      want.outputs[r.rid], err_msg=r.rid)
+
+
+# ---------------------------------------------------------------------------
+# Calibration: measured rows -> fitted prior -> search decision
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_roundtrip_and_fit(qat_model):
+    from repro.sched.search import SpecCalibration, search_spec
+    cfg, _ = qat_model
+    cal = SpecCalibration()
+    cal.add(cfg.name, "layerskip", 0.5, 0.7, weight=120.0)
+    cal.add(cfg.name, "layerskip", 0.25, 0.9, weight=80.0)
+    cal2 = SpecCalibration.from_json(cal.to_json())
+    m = cal2.accept_model(cfg.name, "layerskip")
+    # exact re-queries reproduce the measurements (the other measured
+    # point keeps a sub-percent inverse-distance share)
+    assert m(0.5) == pytest.approx(0.7, abs=5e-3)
+    assert m(0.25) == pytest.approx(0.9, abs=5e-3)
+    # in-between gaps interpolate inside the measured bracket
+    assert 0.7 < m(0.4) < 0.9
+    # the fitted prior prices the search: the winning row's expected
+    # tokens/round must be the cost model's at the fitted acceptance
+    res = search_spec(cfg, target_sparsity=0.6, calibration=cal2,
+                      arch=cfg.name, ks=(2, 4), draft_sparsities=(0.85,),
+                      keeps=(0.5, 0.75))
+    for row in res.table:
+        if row["accept_source"] == "calibrated":
+            want = PM.expected_spec_tokens(row["k"], row["accept"])
+            # both row fields are rounded to 4 decimals in the summary
+            assert row["tokens_per_round"] == pytest.approx(want, abs=1e-3)
+    assert any(r["accept_source"] == "calibrated" for r in res.table)
+
+
+def test_calibration_rejects_malformed():
+    from repro.sched.search import SpecCalibration
+    with pytest.raises(ValueError):
+        SpecCalibration.from_json({"schema": 99, "rows": []})
+    with pytest.raises(ValueError):
+        SpecCalibration.from_json({"schema": 1, "rows": [{"arch": "a"}]})
+    cal = SpecCalibration()
+    with pytest.raises(ValueError):
+        cal.add("a", "layerskip", 0.5, 1.5)  # accept out of range
+    with pytest.raises(ValueError):
+        cal.add("a", "layerskip", 0.5, 0.5, weight=0.0)
+
+
+def test_calibration_trust_decays_to_prior(qat_model):
+    from repro.sched.search import SpecCalibration
+    cfg, _ = qat_model
+    cal = SpecCalibration()
+    cal.add(cfg.name, "layerskip", 0.5, 0.95, weight=100.0)
+    prior = lambda g: max(0.0, 1.0 - g)
+    m = cal.accept_model(cfg.name, "layerskip", prior=prior)
+    # at the measured gap: the measurement
+    assert m(0.5) == pytest.approx(0.95, abs=1e-3)
+    # far from all data the answer falls back TOWARD the prior instead of
+    # flat-extrapolating the single measurement across the knob axis
+    far = m(0.9)
+    assert prior(0.9) < far < 0.95
+    assert far - prior(0.9) < 0.95 - prior(0.9)
+
+
+def test_search_spec_declines_when_calibrated_dead(qat_model):
+    """Measured-dead acceptance across both families must produce the
+    'declined' verdict - the auto policy never ships a modeled loss."""
+    from repro.sched.search import SpecCalibration, search_spec
+    cfg, _ = qat_model
+    cal = SpecCalibration()
+    for fam, gaps in (("reprune", (0.15, 0.25, 0.35)),
+                      ("layerskip", (0.25, 0.5, 0.75))):
+        for g in gaps:
+            cal.add(cfg.name, fam, g, 0.0, weight=500.0)
+    res = search_spec(cfg, target_sparsity=0.6, calibration=cal,
+                      arch=cfg.name)
+    d = res.decision
+    assert d["verdict"] == "declined" and d["reason"] == "scan wins"
+    assert d["accept_source"] == "calibrated"
+
+
+def test_spec_stats_histogram_and_counters():
+    st = SP.SpecStats(k=4, draft_sparsity=0.0, family="layerskip", keep=0.5)
+    st.record(n_proposed=4, n_accepted=4, n_emitted=5)
+    st.record(n_proposed=4, n_accepted=0, n_emitted=1)
+    st.record(n_proposed=1, n_accepted=1, n_emitted=2)  # collapsed round
+    j = st.to_json()
+    assert j["family"] == "layerskip" and j["keep"] == 0.5
+    assert j["proposed"] == 9 and j["accepted"] == 5
+    assert j["spec_accepted_tokens"] == 5
+    assert j["spec_rejected_tokens"] == 4
+    assert j["accepted_len_hist"] == [1, 1, 0, 0, 1]
+    assert j["acceptance_rate"] == pytest.approx(5 / 9, abs=1e-3)
