@@ -1,0 +1,35 @@
+"""repro.gateway - multi-tenant serving over one shared KV block pool.
+
+A :class:`Gateway` fronts several tenants - each a PR 4 offline artifact
+bound into a :class:`TenantRuntime` - behind ONE shared
+:class:`~repro.serve.batching.PagedKVCache`:
+
+  * :mod:`tenant` - artifact binding, the hot-swap contract (in-place on
+    matching envelope / staged re-jit otherwise / rejected on KV-geometry
+    mismatch), the trace-counting evidence for "zero recompiles";
+  * :mod:`admission` - the simulator-priced admission controller and the
+    documented deadline / quota / overload shed contract;
+  * :mod:`gateway` - the step loop: priority admission, per-tenant decode
+    rounds (bit-identical to dedicated single-tenant servers under greedy
+    decode), per-tenant prefix tries over the shared pool, chunked /
+    device-pinned prefill so long prompts never stall in-flight decode.
+
+See the README's "Multi-tenant gateway" section for the tenants.json
+schema and ``python -m repro.launch.serve --gateway tenants.json``.
+"""
+from __future__ import annotations
+
+from .admission import (ADMIT, DEFER, SHED,  # noqa: F401
+                        AdmissionController, ShedEvent)
+from .gateway import (Gateway, GatewayConfig,  # noqa: F401
+                      GatewayReport, SwapEvent)
+from .tenant import (CompileCounter, TenantRegistry,  # noqa: F401
+                     TenantRuntime, TenantSLO, envelope_signature,
+                     kv_geometry)
+
+__all__ = [
+    "ADMIT", "AdmissionController", "CompileCounter", "DEFER", "Gateway",
+    "GatewayConfig", "GatewayReport", "SHED", "ShedEvent", "SwapEvent",
+    "TenantRegistry", "TenantRuntime", "TenantSLO", "envelope_signature",
+    "kv_geometry",
+]

@@ -1,0 +1,561 @@
+"""The multi-tenant serving gateway: one pool, many tenants.
+
+One :class:`Gateway` fronts several :class:`~repro.gateway.tenant.
+TenantRuntime`\\ s behind ONE shared :class:`~repro.serve.batching.
+PagedKVCache` block pool - the serving analogue of MARS squeezing many
+kernel-groups onto a fixed macro fabric. The loop composes three ideas:
+
+  * **simulator-priced admission** - every request is priced by the PR 1
+    event-driven simulator (PR 7 refit constants when given) before any
+    kernel runs; the :class:`~repro.gateway.admission.AdmissionController`
+    applies the documented deadline/quota/overload contract and sheds
+    strictly lowest-priority-first.
+  * **artifact hot-swap** - between steps a tenant's weights can be
+    replaced; a matching uniform envelope swaps in-place with ZERO
+    recompiles (jit cache hit, witnessed by the tenant's compile
+    counter), anything else re-jits on a staged path with an explicit
+    report line.
+  * **disaggregated prefill/decode** - with ``prefill_chunk > 0`` long
+    prompts are prefilled in fixed-size chunks (first chunk through the
+    proven ``prefill_last`` path, continuations through the multi-token
+    ``verify_step`` pass the prefix cache's suffix prefill already uses -
+    the bit-exactness contract is the same), interleaved with decode
+    rounds so an admission can never stall in-flight decodes for more
+    than one chunk. ``prefill_device`` additionally pins the chunk
+    dispatches to a dedicated device - the mesh-slice form of the same
+    split.
+
+Decode rounds are grouped per tenant and padded to the full slot width,
+so jit shapes depend on the tenant and the view bucket - never on
+occupancy - and stay warm across hot-swaps.
+
+Greedy-only: temperatures > 0 are rejected at construction. Greedy decode
+is row-independent (the established batching contract), which is what
+makes every tenant's tokens bit-identical to a dedicated single-tenant
+``BatchServer`` over the same requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..obs import NULL_METRICS, NULL_TRACER, ScopedMetrics, phase_scope
+from ..serve import deployed
+from ..serve.batching import PagedKVCache, Request, RequestQueue, Slot
+from ..serve.engine import ServeConfig, sample_tokens
+from ..serve.prefix import PrefixTrie
+from ..serve.server import ServeReport, _percentiles
+from .admission import DEFER, SHED, AdmissionController
+from .tenant import TenantRegistry, TenantRuntime
+
+
+@dataclasses.dataclass
+class GatewayConfig:
+    """Pool + step-loop knobs (the multi-tenant BatchConfig analogue)."""
+
+    n_slots: int = 4
+    block_size: int = 8
+    n_blocks: int = 96
+    view_bucket: int = 2
+    idle_wait_s: float = 0.002
+    # per-tenant radix-tree prefix KV reuse over the SHARED pool; tries
+    # are strictly per tenant - one tenant's prompts never match another's
+    prefix_cache: bool = True
+    # tokens of pending prefill advanced per gateway step (0 = whole
+    # prompt at admission, the BatchServer behavior). With a budget, a
+    # long prompt costs each step at most one chunk-sized dispatch while
+    # decode rounds keep running every step.
+    prefill_chunk: int = 0
+    # device index the chunked-prefill dispatches are pinned to (None =
+    # default device): the mesh-slice form of prefill/decode
+    # disaggregation when >1 device is visible
+    prefill_device: Optional[int] = None
+    # admission: predicted-backlog ceiling (seconds) and queue bound
+    max_backlog_s: float = float("inf")
+    max_pending: Optional[int] = None
+
+
+@dataclasses.dataclass
+class SwapEvent:
+    """A scheduled mid-run hot-swap: at the top of step ``at_step``,
+    tenant ``tenant`` swaps to ``sp`` (and ``cfg`` when given)."""
+
+    at_step: int
+    tenant: str
+    sp: deployed.ServingParams
+    cfg: Optional[ModelConfig] = None
+
+
+@dataclasses.dataclass
+class GatewayReport:
+    """Per-tenant ServeReports + gateway-level admission/swap evidence."""
+
+    wall_s: float
+    n_steps: int
+    per_tenant: Dict[str, ServeReport]
+    tenant_meta: Dict[str, dict]  # priority/slo/attainment/goodput/compiles
+    shed: List[dict]
+    swaps: List[dict]
+    admission: dict
+    kv_stats: dict
+    metrics: Optional[dict] = None
+
+    def to_json(self) -> dict:
+        """Grouped BY TENANT: each tenant's ServeReport json merged with
+        its SLO/attainment/goodput/compile evidence."""
+        tenants = {}
+        for name, rep in self.per_tenant.items():
+            tenants[name] = {**rep.to_json(), **self.tenant_meta[name]}
+        out = {
+            "wall_s": round(self.wall_s, 4),
+            "n_steps": self.n_steps,
+            "tenants": tenants,
+            "shed_events": self.shed,
+            "n_shed": len(self.shed),
+            "swaps": self.swaps,
+            "admission": self.admission,
+            "kv": self.kv_stats,
+        }
+        if self.metrics is not None:
+            out["metrics"] = self.metrics
+        return out
+
+
+class _TenantAcc:
+    """Per-tenant completion accumulators for the final ServeReport."""
+
+    __slots__ = ("outputs", "ttft", "tpot", "queue_wait", "rounds")
+
+    def __init__(self):
+        self.outputs: Dict[str, np.ndarray] = {}
+        self.ttft: List[float] = []
+        self.tpot: List[float] = []
+        self.queue_wait: List[float] = []
+        self.rounds = 0
+
+
+class Gateway:
+    """Multi-tenant continuous-batching loop over one shared block pool."""
+
+    def __init__(self, tenants, gcfg: Optional[GatewayConfig] = None,
+                 scfg: Optional[ServeConfig] = None,
+                 controller: Optional[AdmissionController] = None,
+                 pricer=None, tracer=None, metrics=None):
+        self.tenants = (tenants if isinstance(tenants, TenantRegistry)
+                        else TenantRegistry(list(tenants)))
+        self.gcfg = gcfg if gcfg is not None else GatewayConfig()
+        self.scfg = scfg if scfg is not None else ServeConfig()
+        if self.scfg.temperature > 0.0:
+            raise ValueError(
+                "the gateway is greedy-only (temperature=0): per-tenant "
+                "bit-parity with dedicated servers rests on greedy decode "
+                "being row-independent")
+        if controller is not None and pricer is not None:
+            raise ValueError("pass controller OR pricer, not both")
+        self.controller = controller if controller is not None else \
+            AdmissionController(pricer=pricer,
+                                max_backlog_s=self.gcfg.max_backlog_s)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
+        self._obs = bool(self.tracer.recording or self.metrics.recording)
+        self._tm = {t.name: ScopedMetrics(self.metrics, tenant=t.name)
+                    for t in self.tenants}
+        # pool geometry: validated equal across tenants by the registry
+        self._pool_cfg = next(iter(self.tenants)).cfg
+        self._prefill_dev = None
+        if self.gcfg.prefill_device is not None:
+            devs = jax.devices()
+            if self.gcfg.prefill_device >= len(devs):
+                raise ValueError(
+                    f"prefill_device={self.gcfg.prefill_device} but only "
+                    f"{len(devs)} device(s) visible")
+            self._prefill_dev = devs[self.gcfg.prefill_device]
+
+    # -- helpers -------------------------------------------------------------
+
+    def _phase(self, name: str, **args):
+        return phase_scope(self.tracer, self.metrics, name, **args)
+
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def _greedy(self, logits) -> np.ndarray:
+        return np.asarray(sample_tokens(logits, self._key, self.scfg),
+                          np.int32)
+
+    def _bucket_blocks(self, n_blocks: int) -> int:
+        vb = self.gcfg.view_bucket
+        return -(-max(1, n_blocks) // vb) * vb
+
+    def _put_prefill(self, *arrays):
+        """Pin chunked-prefill operands to the dedicated prefill device
+        (committed inputs make jit dispatch there), or pass through."""
+        if self._prefill_dev is None:
+            return arrays
+        return tuple(jax.device_put(a, self._prefill_dev) for a in arrays)
+
+    # -- admission -----------------------------------------------------------
+
+    def _worst_blocks(self, req: Request, kv: PagedKVCache) -> int:
+        return kv.blocks_for(len(req.prompt) + req.max_new_tokens)
+
+    def _reserved(self, slots: List[Optional[Slot]], kv: PagedKVCache) -> int:
+        r = 0
+        for i, s in enumerate(slots):
+            if s is not None:
+                r += max(0, kv.blocks_for(s.worst_positions)
+                         - len(kv.tables[i]))
+        return r
+
+    def _record_shed(self, req: Request, reason: str, now: float) -> None:
+        ev = self.controller.record_shed(req, reason, now)
+        self.metrics.counter("gateway_shed_total", tenant=req.tenant,
+                             reason=reason).inc()
+        self._shed.append(ev.to_json())
+
+    def _evict_tries(self, need: int, first: str) -> None:
+        """Free cold cached prefixes: the admitting tenant's trie first,
+        then the others (pool capacity is shared, so any tenant's cold
+        prefixes are fair game - trie ISOLATION is about matching, not
+        residency)."""
+        order = [first] + [n for n in self._tries if n != first]
+        for name in order:
+            if need <= 0:
+                return
+            need -= self._tries[name].evict(need)
+
+    def _admit(self, q: RequestQueue, slots: List[Optional[Slot]],
+               kv: PagedKVCache, now: float) -> bool:
+        progressed = False
+        for i in range(self.gcfg.n_slots):
+            if slots[i] is not None:
+                continue
+            while True:
+                req = q.pop_ready(now)
+                if req is None:
+                    return progressed
+                rt = self.tenants[req.tenant]
+                price = self.controller.price(rt, req)
+                verdict, reason = self.controller.decide(rt, req, now, price)
+                if verdict == SHED:
+                    self._record_shed(req, reason, now)
+                    progressed = True
+                    continue  # this slot tries the next queued request
+                if verdict == DEFER:
+                    self.controller.record_defer()
+                    q.requeue(req)
+                    return progressed  # retry next step (head-of-line)
+                wb = self._worst_blocks(req, kv)
+                if wb > kv.n_blocks - 1:
+                    raise ValueError(
+                        f"{req.rid} (tenant {req.tenant}): needs {wb} "
+                        f"blocks, pool has {kv.n_blocks - 1} - raise "
+                        "n_blocks/block_size")
+                trie = self._tries.get(req.tenant)
+                shared: List[int] = []
+                if trie is not None:
+                    shared = trie.match(req.prompt)
+                    if shared:
+                        kv.adopt(i, shared)
+                    if self._obs:
+                        tm = self._tm[req.tenant]
+                        tm.counter("prefix_lookups").inc()
+                        if shared:
+                            tm.counter("prefix_hits").inc()
+                need = wb - len(shared)
+                avail = kv.free_blocks - self._reserved(slots, kv)
+                if need > avail and self._tries:
+                    self._evict_tries(need - avail, req.tenant)
+                    avail = kv.free_blocks - self._reserved(slots, kv)
+                if need > avail:
+                    kv.free_slot(i)  # roll back adoption - leaks nothing
+                    q.requeue(req)  # backpressure: wait for a drain
+                    return progressed
+                self._start_slot(i, rt, req, kv, slots, len(shared),
+                                 queue_wait=max(0.0,
+                                                now - max(req.arrival, 0.0)))
+                self.controller.commit(rt, req, price)
+                self._price[i] = price
+                progressed = True
+                break
+        return progressed
+
+    # -- prefill -------------------------------------------------------------
+
+    def _start_slot(self, i: int, rt: TenantRuntime, req: Request,
+                    kv: PagedKVCache, slots: List[Optional[Slot]],
+                    n_shared: int, queue_wait: float) -> None:
+        now = self._now()
+        slots[i] = Slot(req=req, pos=len(req.prompt), next_token=-1, out=[],
+                        t_admit=now, token_times=[], queue_wait_s=queue_wait,
+                        prefix_tokens=n_shared * self.gcfg.block_size)
+        self._pf[i] = n_shared * self.gcfg.block_size  # prefilled positions
+        if self.gcfg.prefill_chunk <= 0:
+            # unchunked: the whole prompt lands now (BatchServer behavior)
+            with self._phase("prefill", rid=req.rid, tenant=rt.name,
+                             slot=i, shared_blocks=n_shared):
+                while i in self._pf:
+                    self._advance_one(i, rt, kv, slots,
+                                      len(req.prompt) - self._pf[i])
+
+    def _advance_prefills(self, slots: List[Optional[Slot]],
+                          kv: PagedKVCache) -> bool:
+        """Spend this step's chunk budget on pending prefills, oldest
+        first. Decode rounds run regardless - this is the interleaved
+        form of the prefill/decode split."""
+        budget = self.gcfg.prefill_chunk
+        progressed = False
+        for i in sorted(self._pf, key=lambda j: slots[j].t_admit):
+            if budget <= 0:
+                break
+            rt = self.tenants[slots[i].req.tenant]
+            with self._phase("prefill_chunk", rid=slots[i].req.rid,
+                             tenant=rt.name, slot=i):
+                budget -= self._advance_one(i, rt, kv, slots, budget)
+            progressed = True
+        return progressed
+
+    def _advance_one(self, i: int, rt: TenantRuntime, kv: PagedKVCache,
+                     slots: List[Optional[Slot]], budget: int) -> int:
+        """Advance slot ``i``'s prefill by one chunk (<= budget tokens);
+        returns tokens consumed. Completion emits the first token."""
+        s = slots[i]
+        prompt = s.req.prompt
+        tlen = len(prompt)
+        m = self._pf[i]
+        chunk = self.gcfg.prefill_chunk if self.gcfg.prefill_chunk > 0 \
+            else tlen
+        take = min(budget, chunk, tlen - m)
+        bs = self.gcfg.block_size
+        cfg = rt.cfg
+        if m == 0:
+            # first chunk: the proven full-prefill path at a fixed pad
+            # width (stable jit shapes across prompts)
+            s_pad = -(-chunk // bs) * bs
+            toks = np.pad(prompt[:take], (0, s_pad - take))[None]
+            args = self._put_prefill(jnp.asarray(toks),
+                                     jnp.asarray(take, jnp.int32))
+            logits, k, v = rt._prefill(rt.params, *args, cfg=cfg)
+            kv.write_prefill(i, k[:, 0], v[:, 0], take)
+            last = logits  # (1, V) at position take-1
+        else:
+            # continuation: ONE multi-token verify pass over the gathered
+            # views - the suffix-prefill path's bit-exactness contract
+            t_pad = chunk
+            kv.ensure(i, m + take)
+            nv = self._bucket_blocks(kv.blocks_for(m + t_pad))
+            toks = np.pad(prompt[m:m + take], (0, t_pad - take))[None]
+            vk, vv = kv.gather(nv, tier=0, slots=[i])
+            args = self._put_prefill(vk, vv, jnp.asarray([m], jnp.int32),
+                                     jnp.asarray(toks))
+            logits, ks, vs = rt._verify(rt.params, *args, cfg=cfg)
+            ks, vs = np.asarray(ks), np.asarray(vs)
+            kv.write_run(i, m, ks[:, 0, :take], vs[:, 0, :take])
+            last = logits[:, take - 1]  # (1, V)
+        m += take
+        self._pf[i] = m
+        if m >= tlen:
+            del self._pf[i]
+            if self._tries.get(rt.name) is not None:
+                nf = tlen // bs
+                if nf:
+                    self._tries[rt.name].insert(prompt[: nf * bs],
+                                                kv.tables[i][:nf])
+            tok = int(self._greedy(last)[0])
+            now = self._now()
+            s.next_token = tok
+            s.out.append(tok)
+            s.token_times.append(now)
+        return take
+
+    # -- decode --------------------------------------------------------------
+
+    def _decode_round(self, rt: TenantRuntime, grp: List[int],
+                      slots: List[Optional[Slot]], kv: PagedKVCache) -> None:
+        """One greedy decode step for ONE tenant's active slots, padded to
+        the full slot width so jit shapes are occupancy-independent."""
+        for i in grp:
+            kv.ensure(i, slots[i].pos + 1)
+        nv = self._bucket_blocks(max(len(kv.tables[i]) for i in grp))
+        rows = grp + [grp[-1]] * (self.gcfg.n_slots - len(grp))
+        vk, vv = kv.gather(nv, tier=0, slots=rows)
+        pos = np.array([slots[i].pos for i in rows], np.int32)
+        toks = np.array([[slots[i].next_token] for i in rows], np.int32)
+        with self._phase("decode_round", tenant=rt.name, n_active=len(grp)):
+            logits, k_new, v_new = rt._decode(
+                rt.params, vk, vv, jnp.asarray(pos), jnp.asarray(toks),
+                cfg=rt.cfg)
+            sampled = self._greedy(logits)
+        k_new, v_new = np.asarray(k_new), np.asarray(v_new)
+        now = self._now()
+        for j, i in enumerate(grp):
+            s = slots[i]
+            kv.write_run(i, s.pos, k_new[:, j:j + 1], v_new[:, j:j + 1])
+            tok = int(sampled[j])
+            s.pos += 1
+            s.out.append(tok)
+            s.token_times.append(now)
+            s.next_token = tok
+        self._acc[rt.name].rounds += 1
+        if self._obs:
+            self._tm[rt.name].counter("decode_steps").inc()
+            self._tm[rt.name].gauge("slots_active").set(len(grp))
+
+    # -- the loop ------------------------------------------------------------
+
+    def run(self, requests: List[Request],
+            swaps: Optional[List[SwapEvent]] = None) -> GatewayReport:
+        gcfg = self.gcfg
+        for r in requests:
+            if r.tenant not in self.tenants:
+                raise ValueError(
+                    f"request {r.rid}: unknown tenant {r.tenant!r} - "
+                    f"gateway serves {self.tenants.names}")
+        q = RequestQueue(max_pending=gcfg.max_pending)
+        self._t0 = time.monotonic()
+        self._shed: List[dict] = []
+        for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            dropped = q.push(r)
+            if dropped is not None:
+                self._record_shed(dropped, "queue_overflow", 0.0)
+        kv = PagedKVCache(self._pool_cfg, gcfg.n_slots, gcfg.n_blocks,
+                          gcfg.block_size)
+        self._tries: Dict[str, PrefixTrie] = (
+            {t.name: PrefixTrie(kv) for t in self.tenants}
+            if gcfg.prefix_cache else {})
+        slots: List[Optional[Slot]] = [None] * gcfg.n_slots
+        self._pf: Dict[int, int] = {}  # slot -> prefilled positions
+        self._price: Dict[int, object] = {}
+        self._acc: Dict[str, _TenantAcc] = {t.name: _TenantAcc()
+                                            for t in self.tenants}
+        self._key = jax.random.PRNGKey(self.scfg.seed)
+        pending_swaps = sorted(swaps or [], key=lambda e: e.at_step)
+        swap_reports: List[dict] = []
+        step = 0
+
+        def finish(i: int) -> None:
+            s = slots[i]
+            acc = self._acc[s.req.tenant]
+            acc.outputs[s.req.rid] = np.asarray(s.out, np.int32)
+            acc.ttft.append(s.token_times[0] - max(s.req.arrival, 0.0))
+            acc.queue_wait.append(s.queue_wait_s)
+            acc.tpot.extend(np.diff(s.token_times).tolist())
+            self._tm[s.req.tenant].counter("requests_finished").inc()
+            price = self._price.pop(i, None)
+            if price is not None:
+                self.controller.release(price)
+            kv.free_slot(i)
+            slots[i] = None
+
+        while len(q) or any(s is not None for s in slots):
+            while pending_swaps and pending_swaps[0].at_step <= step:
+                ev = pending_swaps.pop(0)
+                rep = self.tenants.hot_swap(ev.tenant, ev.sp, ev.cfg)
+                rep = {**rep, "at_step": step}
+                swap_reports.append(rep)
+                print(f"gateway: hot-swap tenant={rep['tenant']} "
+                      f"mode={rep['mode']} tile={rep['tile']} "
+                      f"at_step={step}")
+            progressed = self._admit(q, slots, kv, self._now())
+            # finished straight out of prefill (max_new=1 / instant EOS)
+            for i, s in enumerate(slots):
+                if s is not None and i not in self._pf and (
+                        s.done or s.next_token == self.scfg.eos_id):
+                    finish(i)
+                    progressed = True
+            if self._pf:
+                progressed |= self._advance_prefills(slots, kv)
+            groups: Dict[str, List[int]] = {}
+            for i, s in enumerate(slots):
+                if s is not None and i not in self._pf and s.token_times:
+                    groups.setdefault(s.req.tenant, []).append(i)
+            for name in sorted(groups):
+                self._decode_round(self.tenants[name], groups[name],
+                                   slots, kv)
+                progressed = True
+            if groups:
+                step += 1
+            if self._obs:
+                self.metrics.gauge("kv_blocks_in_use").set(kv.blocks_in_use)
+                self.metrics.gauge("gateway_backlog_s").set(
+                    self.controller.backlog_s)
+            for i, s in enumerate(slots):
+                if s is not None and i not in self._pf and s.token_times \
+                        and (s.done or s.next_token == self.scfg.eos_id):
+                    finish(i)
+            if not progressed and not groups:
+                # nothing runnable: wait for the next arrival (or for
+                # wall time to refill a quota window)
+                nxt = q.next_arrival()
+                wait = gcfg.idle_wait_s if nxt is None \
+                    else max(nxt - self._now(), 0.0)
+                time.sleep(min(max(wait, 1e-4), gcfg.idle_wait_s))
+
+        wall = self._now()
+        return self._report(wall, step, kv, swap_reports)
+
+    # -- reporting -----------------------------------------------------------
+
+    def _report(self, wall: float, n_steps: int, kv: PagedKVCache,
+                swap_reports: List[dict]) -> GatewayReport:
+        per_tenant: Dict[str, ServeReport] = {}
+        meta: Dict[str, dict] = {}
+        for t in self.tenants:
+            acc = self._acc[t.name]
+            total = sum(len(o) for o in acc.outputs.values())
+            prefix = None
+            if t.name in self._tries:
+                prefix = {k: (round(v, 4) if isinstance(v, float) else v)
+                          for k, v in self._tries[t.name].stats().items()}
+            rep = ServeReport(
+                n_requests=len(acc.outputs), total_tokens=total,
+                wall_s=wall, n_decode_steps=acc.rounds, ttft_s=acc.ttft,
+                tpot_s=acc.tpot, outputs=acc.outputs, kv_stats=kv.stats(),
+                queue_wait_s=acc.queue_wait, prefix=prefix, tenant=t.name)
+            rep._n_slots = self.gcfg.n_slots
+            per_tenant[t.name] = rep
+            meta[t.name] = self._tenant_meta(t, rep, wall)
+        for srep in swap_reports:
+            t = self.tenants[srep["tenant"]]
+            srep["recompiles_after_swap"] = (int(t.compiles.n)
+                                             - srep["compiles_at_swap"])
+        snap = self.metrics.snapshot() or None if self._obs else None
+        return GatewayReport(
+            wall_s=wall, n_steps=n_steps, per_tenant=per_tenant,
+            tenant_meta=meta, shed=self._shed, swaps=swap_reports,
+            admission=self.controller.stats(), kv_stats=kv.stats(),
+            metrics=snap)
+
+    def _tenant_meta(self, t: TenantRuntime, rep: ServeReport,
+                     wall: float) -> dict:
+        """SLO attainment + goodput: the per-tenant evidence the bench row
+        and the overload test read."""
+        att: Dict[str, float] = {}
+        good_tokens = rep.total_tokens
+        if t.slo.ttft_ms is not None and rep.ttft_s:
+            target = t.slo.ttft_ms / 1e3
+            met = [x <= target for x in rep.ttft_s]
+            att["ttft"] = round(sum(met) / len(met), 4)
+            att["ttft_p50_ms"] = round(
+                _percentiles(rep.ttft_s)["p50"] * 1e3, 3)
+            # goodput counts only tokens of requests that met their TTFT
+            good_tokens = sum(
+                len(o) for ok, o in zip(met, rep.outputs.values()) if ok)
+        if t.slo.tpot_ms is not None and rep.tpot_s:
+            target = t.slo.tpot_ms / 1e3
+            att["tpot"] = round(
+                sum(x <= target for x in rep.tpot_s) / len(rep.tpot_s), 4)
+        goodput = good_tokens / wall if wall > 0 else 0.0
+        return {
+            "priority": t.priority,
+            "slo": t.slo.to_json() or None,
+            "slo_attainment": att or None,
+            "goodput_tokens_per_s": round(goodput, 2),
+            "compiles": int(t.compiles.n),
+        }

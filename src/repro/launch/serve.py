@@ -38,6 +38,12 @@
   # legacy static-batch Engine (any registry family)
   PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b --smoke \\
       --engine legacy --batch 4 --prompt-len 16 --new-tokens 32
+
+  # multi-tenant gateway: several tenants (artifacts or fresh inits)
+  # behind ONE shared KV pool, priced admission, optional mid-run
+  # hot-swaps; see the README's "Multi-tenant gateway" for tenants.json
+  PYTHONPATH=src python -m repro.launch.serve --smoke \\
+      --gateway tenants.json --gateway-parity-check
 """
 from __future__ import annotations
 
@@ -497,9 +503,137 @@ def _batch(args, cfg, params):
         print(f"profile: jax.profiler trace -> {args.profile}")
 
 
+def _tenant_cfg_sp(entry, args):
+    """One tenants.json entry -> (cfg, ServingParams). An ``artifact``
+    boots the stored packing (validated against the entry's arch); else a
+    fresh init from ``seed`` is served dense or uniformly compressed."""
+    arch = entry.get("arch") or args.arch
+    if not arch:
+        raise SystemExit(
+            f"tenant {entry.get('name')!r}: no 'arch' in tenants.json and "
+            "no --arch fallback")
+    cfg = (registry.get_smoke_config(arch, dtype=args.dtype) if args.smoke
+           else registry.get_config(arch, dtype=args.dtype))
+    tile = _parse_tile(entry.get("tile", ""))
+    if entry.get("artifact"):
+        sp, _, _ = deployed.load_artifact_tiers(
+            entry["artifact"], arch=cfg.name, tile=tile)
+        print(f"gateway: tenant {entry['name']} loaded artifact "
+              f"{entry['artifact']} (arch={cfg.name})")
+        return cfg, sp
+    params = registry.model_fns(cfg).init_params(
+        cfg, jax.random.PRNGKey(int(entry.get("seed", 0))))
+    if entry.get("compressed"):
+        sp = deployed.compress(
+            cfg, params,
+            target_sparsity=float(entry.get("target_sparsity", 0.5)),
+            tile=tile if tile else (16, 16), uniform=True)
+    else:
+        sp = deployed.from_params(cfg, params)
+    return cfg, sp
+
+
+def _gateway(args):
+    """Multi-tenant serving: tenants.json -> Gateway run (+ optional
+    per-tenant parity audit against dedicated single-tenant servers)."""
+    from ..gateway import (AdmissionController, Gateway, GatewayConfig,
+                           SwapEvent, TenantRuntime, TenantSLO)
+    from ..sched.pricing import Pricer
+
+    with open(args.gateway) as f:
+        spec = json.load(f)
+    entries = spec.get("tenants")
+    if not entries:
+        raise SystemExit(f"{args.gateway}: no 'tenants' list")
+    tenants, swaps, traces = [], [], {}
+    for i, entry in enumerate(entries):
+        name = entry.get("name")
+        if not name:
+            raise SystemExit(f"{args.gateway}: tenants[{i}] has no 'name'")
+        cfg, sp = _tenant_cfg_sp(entry, args)
+        tenants.append(TenantRuntime(
+            name, cfg, sp, priority=int(entry.get("priority", 0)),
+            slo=TenantSLO.from_json(entry.get("slo")),
+            sparsity=float(entry.get("sparsity", 0.0)),
+            artifact=entry.get("artifact", "")))
+        n_req = int(entry.get("requests", args.requests))
+        reqs = synthetic_trace(cfg, n_req, args.prompt_len, args.new_tokens,
+                               seed=args.seed + i)
+        deadline_s = entry.get("deadline_s")
+        traces[name] = [dataclasses.replace(
+            r, rid=f"{name}-{r.rid}", tenant=name,
+            priority=int(entry.get("priority", 0)),
+            deadline=(r.arrival + float(deadline_s)
+                      if deadline_s is not None else None))
+            for r in reqs]
+        hs = entry.get("hot_swap")
+        if hs:
+            if hs.get("artifact"):
+                sp2, _, _ = deployed.load_artifact_tiers(
+                    hs["artifact"], arch=cfg.name)
+            else:
+                sp2 = _tenant_cfg_sp(
+                    {**entry, "seed": hs.get("reseed", 1),
+                     "artifact": "", "tile": hs.get("tile",
+                                                    entry.get("tile", ""))},
+                    args)[1]
+            swaps.append(SwapEvent(at_step=int(hs.get("at_step", 1)),
+                                   tenant=name, sp=sp2))
+    gspec = spec.get("gateway", {})
+    gcfg = GatewayConfig(
+        n_slots=int(gspec.get("n_slots", args.slots)),
+        block_size=int(gspec.get("block_size", args.block_size)),
+        n_blocks=int(gspec.get("n_blocks", args.kv_blocks)),
+        prefill_chunk=int(gspec.get("prefill_chunk", args.prefill_chunk)),
+        prefill_device=gspec.get("prefill_device", args.prefill_device),
+        max_backlog_s=float(gspec.get("max_backlog_s", args.max_backlog_s)),
+        max_pending=(int(gspec["max_pending"]) if "max_pending" in gspec
+                     else args.max_pending))
+    controller = AdmissionController(pricer=Pricer(),
+                                     max_backlog_s=gcfg.max_backlog_s)
+    gw = Gateway(tenants, gcfg, ServeConfig(seed=args.seed),
+                 controller=controller)
+    all_reqs = [r for reqs in traces.values() for r in reqs]
+    print(f"gateway: {len(tenants)} tenant(s) "
+          f"({', '.join(t.name for t in tenants)}), {len(all_reqs)} "
+          f"request(s), one shared pool of {gcfg.n_blocks} blocks")
+    rep = gw.run(all_reqs, swaps=swaps)
+    for ev in rep.shed:
+        print(f"gateway: shed rid={ev['rid']} tenant={ev['tenant']} "
+              f"priority={ev['priority']} reason={ev['reason']}")
+    out = rep.to_json()
+    if args.gateway_parity_check:
+        # per-tenant bit-exactness audit: each tenant's gateway tokens vs
+        # a dedicated single-tenant BatchServer over the same requests
+        swapped = {ev.tenant for ev in swaps}
+        for t in tenants:
+            if t.name in swapped:
+                # pre-swap tokens came from weights the tenant no longer
+                # holds - a post-hoc re-serve cannot reproduce them
+                print(f"gateway: tenant={t.name} "
+                      "tokens_match_dedicated=skipped(hot-swap)")
+                continue
+            served = rep.per_tenant[t.name].outputs
+            bcfg = BatchConfig(n_slots=gcfg.n_slots,
+                               block_size=gcfg.block_size,
+                               n_blocks=gcfg.n_blocks)
+            ded = BatchServer(t.cfg, t.sp, ServeConfig(seed=args.seed),
+                              bcfg, engine="scan").run(
+                [Request(r.rid, r.prompt, r.max_new_tokens)
+                 for r in traces[t.name] if r.rid in served])
+            match = bool(all(np.array_equal(served[rid], o)
+                             for rid, o in ded.outputs.items()))
+            out.setdefault("parity", {})[t.name] = match
+            print(f"gateway: tenant={t.name} "
+                  f"tokens_match_dedicated={match}")
+    print(json.dumps(out, indent=1))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="",
+                    help="registry architecture (required unless --gateway "
+                    "names per-tenant arches)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--engine", choices=["batch", "static", "legacy"],
                     default="batch",
@@ -565,6 +699,30 @@ def main(argv=None):
                     help="also serve the trace with the prefix cache OFF "
                     "and report tokens_match_unshared (the sharing "
                     "bit-exactness contract)")
+    ap.add_argument("--gateway", default="", metavar="TENANTS_JSON",
+                    help="multi-tenant gateway mode: serve the tenants "
+                    "described in TENANTS_JSON behind one shared KV pool "
+                    "with simulator-priced admission (see the README's "
+                    "'Multi-tenant gateway' for the schema)")
+    ap.add_argument("--gateway-parity-check", action="store_true",
+                    help="with --gateway: re-serve each tenant's requests "
+                    "on a dedicated single-tenant server and report "
+                    "tokens_match_dedicated (the isolation bit-exactness "
+                    "contract)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="gateway: advance pending prefills at most N "
+                    "tokens per step, interleaved with decode rounds "
+                    "(0 = whole prompt at admission)")
+    ap.add_argument("--prefill-device", type=int, default=None,
+                    help="gateway: pin chunked-prefill dispatches to this "
+                    "device index (prefill/decode disaggregation)")
+    ap.add_argument("--max-backlog-s", type=float, default=float("inf"),
+                    help="gateway: shed (lowest-priority-first) once the "
+                    "simulator-predicted backlog exceeds this many seconds")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="gateway: bound the request queue; overflow sheds "
+                    "the lowest-priority pending request (counted, never "
+                    "silent)")
     ap.add_argument("--target-sparsity", type=float, default=0.5)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -577,6 +735,13 @@ def main(argv=None):
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.gateway:
+        _gateway(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required (unless --gateway names per-tenant "
+                 "arches)")
 
     cfg = (registry.get_smoke_config(args.arch, dtype=args.dtype) if args.smoke
            else registry.get_config(args.arch, dtype=args.dtype))

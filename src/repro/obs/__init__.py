@@ -27,7 +27,8 @@ import time
 
 from . import gap, history, metrics, trace  # noqa: F401
 from .metrics import (MetricsRegistry, NullMetricsRegistry,  # noqa: F401
-                      NULL_METRICS, validate_metrics_snapshot)
+                      NULL_METRICS, ScopedMetrics,
+                      validate_metrics_snapshot)
 from .trace import (NullTracer, NULL_TRACER, Tracer,  # noqa: F401
                     validate_chrome_trace, validate_chrome_trace_file)
 
@@ -66,7 +67,7 @@ def phase_scope(tracer, metrics_reg, name: str, **args):
 
 __all__ = [
     "MetricsRegistry", "NullMetricsRegistry", "NULL_METRICS",
-    "NullTracer", "NULL_TRACER", "Tracer",
+    "ScopedMetrics", "NullTracer", "NULL_TRACER", "Tracer",
     "gap", "history", "metrics", "phase_scope", "trace",
     "validate_chrome_trace", "validate_chrome_trace_file",
     "validate_metrics_snapshot",

@@ -77,6 +77,21 @@ def flatten_serve(bench: Dict[str, Any]) -> Dict[str, float]:
         # long before tokens/s shows it on a noisy runner)
         out["serve.spec_vs_scan.acceptance_rate"] = \
             float(spec["acceptance_rate"])
+    gw = bench.get("gateway_two_tenant")
+    if isinstance(gw, dict):
+        # per-tenant gateway health: goodput gates like throughput, and
+        # SLO attainment dropping means admission stopped protecting the
+        # high-priority tenant (visible long before pooled tokens/s moves)
+        for tname, trow in sorted((gw.get("tenants") or {}).items()):
+            if not isinstance(trow, dict):
+                continue
+            if "goodput_tokens_per_s" in trow:
+                out[f"serve.gateway_two_tenant.{tname}.goodput_tokens_per_s"] \
+                    = float(trow["goodput_tokens_per_s"])
+            att = trow.get("slo_attainment")
+            if isinstance(att, dict) and "ttft" in att:
+                out[f"serve.gateway_two_tenant.{tname}.slo_attainment"] = \
+                    float(att["ttft"])
     return out
 
 
@@ -152,7 +167,9 @@ def _is_throughput(metric: str) -> bool:
     # relative drop is the regression
     return metric.endswith(".tokens_per_s") \
         or metric.endswith(".fps_searched") \
-        or metric.endswith(".acceptance_rate")
+        or metric.endswith(".acceptance_rate") \
+        or metric.endswith(".slo_attainment") \
+        or metric.endswith(".goodput_tokens_per_s")
 
 
 def _median(vals: Sequence[float]) -> float:

@@ -203,6 +203,42 @@ class NullMetricsRegistry:
 NULL_METRICS = NullMetricsRegistry()
 
 
+class ScopedMetrics:
+    """A registry view that stamps fixed labels onto every instrument.
+
+    The multi-tenant gateway hands each tenant's ``BatchServer``-style
+    plumbing ``ScopedMetrics(registry, tenant="acme")``: every existing
+    serve counter/gauge/histogram (slot occupancy, KV-pool utilization,
+    prefix hits) then lands under ``name{tenant=acme,...}`` in the SHARED
+    registry with no new sinks and no call-site changes. Call-site labels
+    win on collision (a call that explicitly passes ``tenant=`` overrides
+    the scope). Scoping a scope composes; scoping :data:`NULL_METRICS`
+    stays a no-op."""
+
+    def __init__(self, registry, **labels):
+        self._registry = registry
+        self._labels = labels
+
+    @property
+    def recording(self) -> bool:
+        return self._registry.recording
+
+    def counter(self, name: str, **labels):
+        return self._registry.counter(name, **{**self._labels, **labels})
+
+    def gauge(self, name: str, **labels):
+        return self._registry.gauge(name, **{**self._labels, **labels})
+
+    def histogram(self, name: str, **labels):
+        return self._registry.histogram(name, **{**self._labels, **labels})
+
+    def clear(self) -> None:
+        self._registry.clear()
+
+    def snapshot(self) -> dict:
+        return self._registry.snapshot()
+
+
 # ---------------------------------------------------------------------------
 # Snapshot validation (CI checks the emitted --metrics-out file)
 # ---------------------------------------------------------------------------

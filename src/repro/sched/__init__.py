@@ -18,6 +18,7 @@ from .graph import (LayerGraph, LayerNode, attach_weights, graph_from_layers,
 from .executor import (LayerSchedule, NetworkSchedule, build_schedule,
                        deploy_layer, execute_layer, execute_network,
                        schedule_from_search, verify_layer)
+from .pricing import Pricer, RequestPrice, StepPrice
 from .search import (CandidateResult, MappingCandidate, SearchResult,
                      SpecCalibration, SpecSearchResult,
                      default_candidate, greedy_search, search_mapping,
@@ -33,6 +34,7 @@ __all__ = [
     "lm_graph", "resnet18_graph", "vgg16_graph",
     "LayerSchedule", "NetworkSchedule", "build_schedule", "deploy_layer",
     "execute_layer", "execute_network", "schedule_from_search", "verify_layer",
+    "Pricer", "RequestPrice", "StepPrice",
     "CandidateResult", "MappingCandidate", "SearchResult",
     "SpecCalibration", "SpecSearchResult", "default_candidate",
     "greedy_search", "search_mapping", "search_spec",

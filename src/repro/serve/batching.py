@@ -69,12 +69,21 @@ def kv_view_spec(cfg: ModelConfig, mesh: Mesh) -> Optional[P]:
 @dataclasses.dataclass
 class Request:
     """One generation request. ``arrival`` is seconds relative to the start
-    of the serve loop (0 = already waiting)."""
+    of the serve loop (0 = already waiting).
+
+    ``priority`` orders READY requests (higher admits first; equal
+    priorities keep strict FIFO). ``deadline`` is an absolute trace-clock
+    second past which serving the request is pointless (the gateway sheds
+    it instead of admitting); ``tenant`` attributes the request to a
+    gateway tenant ("" = single-tenant serving)."""
 
     rid: str
     prompt: np.ndarray  # (S,) int32 token ids
     max_new_tokens: int
     arrival: float = 0.0
+    priority: int = 0
+    deadline: Optional[float] = None
+    tenant: str = ""
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -82,39 +91,102 @@ class Request:
             raise ValueError(f"{self.rid}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"{self.rid}: max_new_tokens must be >= 1")
+        if self.deadline is not None and self.deadline < self.arrival:
+            raise ValueError(f"{self.rid}: deadline {self.deadline} before "
+                             f"arrival {self.arrival}")
 
 
 class RequestQueue:
-    """Min-heap on (arrival, admission order)."""
+    """Two-stage intake: a time heap for not-yet-arrived requests and a
+    priority heap for ready ones.
 
-    def __init__(self, requests: Optional[List[Request]] = None):
-        self._heap: list = []
+    ``pop_ready(now)`` first promotes every request whose arrival has
+    passed, then pops the highest-priority ready request; equal priorities
+    break ties by admission order (stable FIFO - the seed behavior when
+    every priority is 0). ``requeue`` returns a popped-but-unadmitted
+    request to the FRONT of its priority class so smaller peers can never
+    leapfrog it forever.
+
+    ``max_pending`` bounds the TOTAL queued count: an overflowing push
+    evicts the lowest-priority / newest request (possibly the incoming one)
+    and RETURNS it instead of silently dropping, incrementing ``n_shed`` -
+    the gateway mirrors that into its ``gateway_shed_total`` counter."""
+
+    def __init__(self, requests: Optional[List[Request]] = None,
+                 max_pending: Optional[int] = None):
+        self._arrivals: list = []  # (arrival, seq, req)
+        self._ready: list = []     # (-priority, seq, req)
         self._seq = 0
         self._front = -1
+        self.max_pending = max_pending
+        self.n_shed = 0
         for r in requests or []:
             self.push(r)
 
-    def push(self, req: Request) -> None:
-        heapq.heappush(self._heap, (req.arrival, self._seq, req))
+    def push(self, req: Request) -> Optional[Request]:
+        """Queue a request; returns the request SHED by an overflowing
+        push (None when everything fits)."""
+        shed = None
+        if self.max_pending is not None and len(self) >= self.max_pending:
+            shed = self._evict_for(req)
+            if shed is req:
+                self.n_shed += 1
+                return shed
+        heapq.heappush(self._arrivals, (req.arrival, self._seq, req))
         self._seq += 1
+        if shed is not None:
+            self.n_shed += 1
+        return shed
+
+    def _evict_for(self, incoming: Request) -> Request:
+        """Pick the overflow victim: lowest priority first, newest within a
+        priority class (front-of-cohort requeues carry negative seq and are
+        therefore the oldest, i.e. the most protected)."""
+        victim_key, victim = (incoming.priority, -self._seq), incoming
+        for heap in (self._arrivals, self._ready):
+            for _, seq, req in heap:
+                key = (req.priority, -seq)
+                if key < victim_key:
+                    victim_key, victim = key, req
+        if victim is not incoming:
+            for heap in (self._arrivals, self._ready):
+                for i, entry in enumerate(heap):
+                    if entry[2] is victim:
+                        heap[i] = heap[-1]
+                        heap.pop()
+                        heapq.heapify(heap)
+                        return victim
+        return victim
 
     def requeue(self, req: Request) -> None:
         """Return a popped-but-unadmitted request to the FRONT of its
-        arrival cohort (a plain push would hand it a fresh sequence number
+        priority class (a plain push would hand it a fresh sequence number
         and let smaller same-arrival peers leapfrog it forever)."""
-        heapq.heappush(self._heap, (req.arrival, self._front, req))
+        heapq.heappush(self._ready, (-req.priority, self._front, req))
         self._front -= 1
 
+    def _promote(self, now: float) -> None:
+        while self._arrivals and self._arrivals[0][0] <= now:
+            _, seq, req = heapq.heappop(self._arrivals)
+            heapq.heappush(self._ready, (-req.priority, seq, req))
+
     def pop_ready(self, now: float) -> Optional[Request]:
-        if self._heap and self._heap[0][0] <= now:
-            return heapq.heappop(self._heap)[2]
+        self._promote(now)
+        if self._ready:
+            return heapq.heappop(self._ready)[2]
         return None
 
     def next_arrival(self) -> Optional[float]:
-        return self._heap[0][0] if self._heap else None
+        """Earliest instant at which SOME request is (or was) ready."""
+        vals = []
+        if self._arrivals:
+            vals.append(self._arrivals[0][0])
+        if self._ready:
+            vals.append(min(t[2].arrival for t in self._ready))
+        return min(vals) if vals else None
 
     def __len__(self) -> int:
-        return len(self._heap)
+        return len(self._arrivals) + len(self._ready)
 
 
 @dataclasses.dataclass

@@ -238,6 +238,52 @@ def shard(sp: ServingParams, mesh) -> ServingParams:
 # Offline serving artifacts: pack once, boot many times
 # ---------------------------------------------------------------------------
 
+# Manifest schema version. Bump when the manifest layout changes
+# incompatibly; loaders refuse artifacts NEWER than they understand
+# (artifacts saved before versioning carry no field and load as legacy).
+ARTIFACT_SCHEMA = 1
+
+
+def packed_tiles(sp: ServingParams) -> List[Tuple[int, int]]:
+    """Sorted unique (bk, bn) tiles across every deployed projection.
+    A single-element list means the packing is UNIFORM - the stacked-scan
+    envelope (and therefore in-place hot-swap) is possible."""
+    return sorted({dw.tile for dw in sp.deployed().values()})
+
+
+def validate_artifact(path: str, extra: dict, *,
+                      arch: Optional[str] = None,
+                      family: Optional[str] = None,
+                      tile: Optional[Tuple[int, int]] = None) -> None:
+    """The hot-swap compatibility gate: check a loaded manifest against
+    what the serving host expects and raise a CLEAR error (artifact path +
+    expected vs found) instead of letting a mismatched artifact fail deep
+    inside ``core.deploy.stack_deployed``.
+
+    Every check is skipped when the expectation (or the manifest field) is
+    absent, so legacy artifacts written before versioning still load."""
+    schema = extra.get("schema")
+    if schema is not None and int(schema) > ARTIFACT_SCHEMA:
+        raise ValueError(
+            f"{path}: artifact manifest schema {schema} is newer than this "
+            f"host supports ({ARTIFACT_SCHEMA}) - upgrade the serving host "
+            "or re-save the artifact")
+    if arch is not None and extra.get("arch") not in (None, arch):
+        raise ValueError(
+            f"{path}: artifact arch mismatch - expected {arch!r}, found "
+            f"{extra['arch']!r}")
+    if family is not None and extra.get("family") not in (None, family):
+        raise ValueError(
+            f"{path}: artifact family mismatch - expected {family!r}, "
+            f"found {extra['family']!r}")
+    if tile is not None and extra.get("tiles"):
+        found = [tuple(t) for t in extra["tiles"]]
+        if len(found) != 1 or found[0] != tuple(tile):
+            raise ValueError(
+                f"{path}: artifact tile mismatch - expected uniform "
+                f"{tuple(tile)}, found {found} (re-pack with that tile, or "
+                "stage a re-jit instead of hot-swapping)")
+
 
 def _strip_placement(sp: ServingParams) -> ServingParams:
     """Serialization form: logical column order, no mesh, no derived
@@ -274,8 +320,10 @@ def save_artifact(path: str, sp: ServingParams, cfg: ModelConfig,
     ``spec.draft_serving`` builds them) are stored ONCE; the checkpoint
     spec dedupes identical leaf objects.
     """
-    meta = {"arch": cfg.name, "family": cfg.family,
-            "n_layers": cfg.n_layers, **(extra or {})}
+    meta = {"schema": ARTIFACT_SCHEMA, "arch": cfg.name,
+            "family": cfg.family, "n_layers": cfg.n_layers,
+            "tiles": [list(t) for t in packed_tiles(sp)],
+            **(extra or {})}
     clean = _strip_placement(sp)
     if draft is None:
         return ckpt.save_pytree(path, clean, extra=meta)
@@ -290,7 +338,8 @@ def _rebuild_tied_head(sp: ServingParams) -> ServingParams:
     return sp
 
 
-def load_artifact_tiers(path: str
+def load_artifact_tiers(path: str, *, arch: Optional[str] = None,
+                        tile: Optional[Tuple[int, int]] = None
                         ) -> Tuple[ServingParams,
                                    Optional[ServingParams], dict]:
     """Boot EVERY tier of a serving artifact from ONE deserialization pass.
@@ -300,7 +349,15 @@ def load_artifact_tiers(path: str
     the dense leaves the tiers share deduped IN MEMORY too (the draft's
     embed/norm leaves are the same loaded arrays as the target's), where
     two separate :func:`load_artifact` calls would materialize the whole
-    artifact twice."""
+    artifact twice.
+
+    ``arch`` / ``tile`` are expectations checked by
+    :func:`validate_artifact` against the MANIFEST (before any array
+    deserialization), so a mismatched artifact fails with its path and
+    the expected-vs-found fields instead of deep inside ``stack()``."""
+    probe = load_artifact_extra(path)
+    if probe:
+        validate_artifact(path, probe, arch=arch, tile=tile)
     tree, manifest = ckpt.load_pytree(path)
     extra = manifest.get("extra", manifest)
     if isinstance(tree, ServingParams):
@@ -313,7 +370,9 @@ def load_artifact_tiers(path: str
     raise TypeError(f"{path}: artifact does not contain ServingParams")
 
 
-def load_artifact(path: str, tier: str = "target"
+def load_artifact(path: str, tier: str = "target", *,
+                  arch: Optional[str] = None,
+                  tile: Optional[Tuple[int, int]] = None
                   ) -> Tuple[ServingParams, dict]:
     """Boot a ServingParams from :func:`save_artifact` output WITHOUT
     re-running search/quantize/prune/pack. Returns (sp, manifest-extra).
@@ -324,8 +383,9 @@ def load_artifact(path: str, tier: str = "target"
     ``"target"`` (also the whole content of a single-tier artifact) or
     ``"draft"`` (raises on artifacts saved without one). To boot BOTH
     tiers, use :func:`load_artifact_tiers` - one deserialization pass
-    instead of two."""
-    target, draft, extra = load_artifact_tiers(path)
+    instead of two. ``arch`` / ``tile`` gate the manifest first (see
+    :func:`validate_artifact`)."""
+    target, draft, extra = load_artifact_tiers(path, arch=arch, tile=tile)
     if tier == "target":
         return target, extra
     if tier == "draft":

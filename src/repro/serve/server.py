@@ -92,6 +92,9 @@ class ServeReport:
     # prefix-cache telemetry: trie hit/insert/evict counts plus the
     # hit-vs-miss split of service TTFT (None when prefix_cache=False)
     prefix: Optional[dict] = None
+    # gateway attribution: which tenant this report covers ("" = the
+    # whole single-tenant server run)
+    tenant: str = ""
 
     @property
     def tokens_per_s(self) -> float:
@@ -114,6 +117,7 @@ class ServeReport:
 
     def to_json(self) -> dict:
         out = {
+            **({"tenant": self.tenant} if self.tenant else {}),
             "n_requests": self.n_requests,
             "total_tokens": self.total_tokens,
             "wall_s": round(self.wall_s, 4),

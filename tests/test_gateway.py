@@ -1,0 +1,375 @@
+"""Multi-tenant gateway tests.
+
+The contracts under test:
+
+  * ISOLATION: every tenant's greedy tokens through the shared-pool
+    gateway are bit-identical to a dedicated single-tenant BatchServer
+    over the same requests, and one tenant's prefix trie never matches
+    (or leaks blocks into) another tenant's prompts;
+  * HOT-SWAP: swapping an artifact with a matching uniform envelope
+    mid-run keeps serving with ZERO recompiles (trace counter), a
+    mismatched envelope takes the staged re-jit path, a KV-geometry
+    mismatch is rejected;
+  * OVERLOAD: a bounded queue / backlog sheds strictly lowest-priority
+    first (counted, never silent) while the high-priority tenant's TTFT
+    stays within its SLO;
+  * the priority/deadline RequestQueue semantics and the artifact
+    manifest validation the gateway boots through.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.gateway import (AdmissionController, Gateway, GatewayConfig,
+                           SwapEvent, TenantRegistry, TenantRuntime,
+                           TenantSLO)
+from repro.models import registry
+from repro.obs import MetricsRegistry, ScopedMetrics
+from repro.sched.pricing import Pricer
+from repro.serve import (BatchConfig, BatchServer, Request, RequestQueue,
+                         ServeConfig)
+from repro.serve import deployed as DP
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = registry.get_smoke_config("yi-6b", dtype="float32")
+    init = registry.model_fns(cfg).init_params
+    pA = init(cfg, jax.random.PRNGKey(0))
+    pB = init(cfg, jax.random.PRNGKey(1))
+    return cfg, DP.from_params(cfg, pA), DP.from_params(cfg, pB)
+
+
+def _trace(cfg, tenant, n=4, seed=3, priority=0, max_prompt=12, max_new=7):
+    rng = np.random.default_rng(seed)
+    return [Request(f"{tenant}-r{i}",
+                    rng.integers(0, cfg.vocab, int(rng.integers(3, max_prompt))),
+                    int(rng.integers(2, max_new)), tenant=tenant,
+                    priority=priority)
+            for i in range(n)]
+
+
+def _dedicated(cfg, sp, reqs, n_slots=3, block_size=4, n_blocks=48):
+    srv = BatchServer(cfg, sp, ServeConfig(),
+                      BatchConfig(n_slots=n_slots, block_size=block_size,
+                                  n_blocks=n_blocks))
+    return srv.run([Request(r.rid, r.prompt, r.max_new_tokens)
+                    for r in reqs])
+
+
+# ---------------------------------------------------------------------------
+# isolation: per-tenant bit-parity + trie separation
+# ---------------------------------------------------------------------------
+
+
+def test_two_tenant_tokens_match_dedicated_servers(model):
+    cfg, spA, spB = model
+    reqsA = _trace(cfg, "acme", seed=3)
+    reqsB = _trace(cfg, "bolt", seed=4)
+    gw = Gateway([TenantRuntime("acme", cfg, spA),
+                  TenantRuntime("bolt", cfg, spB)],
+                 GatewayConfig(n_slots=3, block_size=4, n_blocks=48))
+    rep = gw.run(reqsA + reqsB)
+    for name, sp, reqs in (("acme", spA, reqsA), ("bolt", spB, reqsB)):
+        want = _dedicated(cfg, sp, reqs)
+        got = rep.per_tenant[name].outputs
+        assert set(got) == {r.rid for r in reqs}
+        for r in reqs:
+            np.testing.assert_array_equal(
+                got[r.rid], want.outputs[r.rid],
+                err_msg=f"{r.rid}: gateway diverged from dedicated server")
+    # report groups by tenant and labels each sub-report
+    j = rep.to_json()
+    assert set(j["tenants"]) == {"acme", "bolt"}
+    assert j["tenants"]["acme"]["tenant"] == "acme"
+
+
+def test_chunked_prefill_tokens_match_dedicated(model):
+    """Disaggregated prefill (fixed chunk budget interleaved with decode)
+    must not change a single token."""
+    cfg, spA, _ = model
+    rng = np.random.default_rng(11)
+    reqs = [Request(f"c{i}", rng.integers(0, cfg.vocab,
+                                          int(rng.integers(9, 22))),
+                    int(rng.integers(2, 6)), tenant="acme")
+            for i in range(5)]
+    gw = Gateway([TenantRuntime("acme", cfg, spA)],
+                 GatewayConfig(n_slots=2, block_size=4, n_blocks=64,
+                               prefill_chunk=4))
+    rep = gw.run(reqs)
+    want = _dedicated(cfg, spA, reqs, n_slots=2, n_blocks=64)
+    for r in reqs:
+        np.testing.assert_array_equal(rep.per_tenant["acme"].outputs[r.rid],
+                                      want.outputs[r.rid], err_msg=r.rid)
+
+
+def test_prefix_trie_never_crosses_tenants(model):
+    """Two tenants serve the IDENTICAL prompt set: with per-tenant tries
+    each tenant's first admission must be a trie miss (a shared trie would
+    hit on the other tenant's cached blocks - and serve tenant B's prompt
+    through tenant A's KV)."""
+    cfg, spA, spB = model
+    rng = np.random.default_rng(7)
+    shared_prompt = rng.integers(0, cfg.vocab, 12).astype(np.int32)
+    reqs = []
+    for tenant in ("acme", "bolt"):
+        for i in range(2):  # second request per tenant may hit its OWN trie
+            suffix = rng.integers(0, cfg.vocab, 3).astype(np.int32)
+            reqs.append(Request(f"{tenant}-p{i}",
+                                np.concatenate([shared_prompt, suffix]),
+                                3, tenant=tenant))
+    gw = Gateway([TenantRuntime("acme", cfg, spA),
+                  TenantRuntime("bolt", cfg, spB)],
+                 GatewayConfig(n_slots=1, block_size=4, n_blocks=64))
+    rep = gw.run(reqs)
+    for name, sp in (("acme", spA), ("bolt", spB)):
+        mine = [r for r in reqs if r.tenant == name]
+        want = _dedicated(cfg, sp, mine, n_slots=1, n_blocks=64)
+        for r in mine:
+            np.testing.assert_array_equal(
+                rep.per_tenant[name].outputs[r.rid], want.outputs[r.rid],
+                err_msg=f"{r.rid}: cross-tenant prefix contamination")
+        pfx = rep.per_tenant[name].prefix
+        # each tenant hits only its OWN earlier insertion, never the other
+        # tenant's identical prompt
+        assert pfx["lookups"] == 2
+        assert pfx["hits"] <= 1
+
+
+def test_unknown_tenant_rejected(model):
+    cfg, spA, _ = model
+    gw = Gateway([TenantRuntime("acme", cfg, spA)])
+    with pytest.raises(ValueError, match="unknown tenant"):
+        gw.run([Request("x", np.arange(4), 2, tenant="ghost")])
+
+
+def test_gateway_is_greedy_only(model):
+    cfg, spA, _ = model
+    with pytest.raises(ValueError, match="greedy"):
+        Gateway([TenantRuntime("acme", cfg, spA)],
+                scfg=ServeConfig(temperature=0.7))
+
+
+# ---------------------------------------------------------------------------
+# hot-swap
+# ---------------------------------------------------------------------------
+
+
+def test_hot_swap_inplace_zero_recompiles(model):
+    """Mid-run swap to a same-envelope packing: serving continues, the
+    post-swap tokens come from the NEW weights, and the tenant's trace
+    counter records ZERO recompiles after the swap."""
+    cfg, spA, spB = model
+    reqs = _trace(cfg, "acme", n=6, seed=9, max_new=8)
+    t = TenantRuntime("acme", cfg, spA)
+    gw = Gateway([t], GatewayConfig(n_slots=2, block_size=4, n_blocks=48))
+    rep = gw.run(reqs, swaps=[SwapEvent(at_step=3, tenant="acme", sp=spB)])
+    assert len(rep.swaps) == 1
+    assert rep.swaps[0]["mode"] == "inplace"
+    assert rep.swaps[0]["recompiles_after_swap"] == 0
+    assert t.sp is spB  # the swap actually landed
+    # serving kept going: every request still completed
+    assert set(rep.per_tenant["acme"].outputs) == {r.rid for r in reqs}
+
+
+def test_hot_swap_mismatched_envelope_is_staged(model):
+    """A packing with a different stacked envelope (compressed BSR vs
+    dense) re-jits on the staged path and says so."""
+    cfg, spA, _ = model
+    qcfg = registry.get_smoke_config("yi-6b", dtype="float32",
+                                     cim_mode="qat")
+    params = registry.model_fns(qcfg).init_params(qcfg, jax.random.PRNGKey(2))
+    spc = DP.compress(qcfg, params, target_sparsity=0.0, tile=(16, 16),
+                      uniform=True)
+    t = TenantRuntime("acme", qcfg, DP.from_params(qcfg, params))
+    rep = t.hot_swap(spc)
+    assert rep["mode"] == "staged"
+    assert rep["tile"] == [16, 16]
+
+
+def test_hot_swap_kv_geometry_mismatch_rejected(model):
+    cfg, spA, _ = model
+    other = dataclasses.replace(cfg, n_layers=cfg.n_layers + 1)
+    t = TenantRuntime("acme", cfg, spA)
+    with pytest.raises(ValueError, match="KV geometry"):
+        t.hot_swap(spA, cfg_new=other)
+
+
+def test_registry_rejects_mixed_kv_geometry(model):
+    cfg, spA, _ = model
+    other = dataclasses.replace(cfg, n_layers=cfg.n_layers + 1)
+    init = registry.model_fns(other).init_params
+    spO = DP.from_params(other, init(other, jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="geometries"):
+        TenantRegistry([TenantRuntime("a", cfg, spA),
+                        TenantRuntime("b", other, spO)])
+
+
+# ---------------------------------------------------------------------------
+# overload: priority sheds + SLO protection
+# ---------------------------------------------------------------------------
+
+
+def test_overflow_sheds_strictly_lowest_priority_first(model):
+    """Queue bounded below the offered load: every shed victim has the
+    lowest priority present, the high-priority tenant is fully served, and
+    its TTFT p50 stays within its (generous) SLO."""
+    cfg, spA, spB = model
+    hi = _trace(cfg, "hi", n=5, seed=1, priority=2, max_new=5)
+    lo = _trace(cfg, "lo", n=5, seed=2, priority=0, max_new=5)
+    gw = Gateway([TenantRuntime("hi", cfg, spA, priority=2,
+                                slo=TenantSLO(ttft_ms=120000)),
+                  TenantRuntime("lo", cfg, spB, priority=0)],
+                 GatewayConfig(n_slots=2, block_size=4, n_blocks=48,
+                               max_pending=6))
+    rep = gw.run(hi + lo)
+    assert rep.shed, "bounded queue under 10 requests must shed"
+    assert all(ev["priority"] == 0 for ev in rep.shed), rep.shed
+    assert all(ev["reason"] == "queue_overflow" for ev in rep.shed)
+    assert set(rep.per_tenant["hi"].outputs) == {r.rid for r in hi}
+    meta = rep.tenant_meta["hi"]
+    assert meta["slo_attainment"]["ttft_p50_ms"] <= 120000
+    assert meta["slo_attainment"]["ttft"] == 1.0
+    # sheds are counted, never silent
+    assert rep.admission["n_shed"] == len(rep.shed)
+
+
+def test_deadline_shed_and_backlog_shed(model):
+    """An unmeetable deadline sheds immediately; a zero backlog budget
+    sheds by the overload rule - both with reasons, both priced first."""
+    cfg, spA, _ = model
+    t = TenantRuntime("acme", cfg, spA)
+    ctrl = AdmissionController(pricer=Pricer())
+    dead = Request("late", np.arange(6), 4, tenant="acme",
+                   deadline=1e-12)
+    price = ctrl.price(t, dead)
+    assert price.total_s > 0
+    assert ctrl.decide(t, dead, now=1.0, price=price) == ("shed", "deadline")
+    tight = AdmissionController(pricer=Pricer(), max_backlog_s=0.0)
+    ok = Request("r", np.arange(6), 4, tenant="acme")
+    p2 = tight.price(t, ok)
+    assert tight.decide(t, ok, now=0.0, price=p2) == ("shed", "overload")
+
+
+def test_quota_defers_then_serves(model):
+    """A tiny token-rate quota DEFERS (never sheds) the over-quota tail;
+    everything still completes once the window refills."""
+    cfg, spA, _ = model
+    reqs = _trace(cfg, "acme", n=3, seed=5, max_new=4)
+    gw = Gateway([TenantRuntime("acme", cfg, spA,
+                                slo=TenantSLO(token_rate=30.0))],
+                 GatewayConfig(n_slots=2, block_size=4, n_blocks=48))
+    rep = gw.run(reqs)
+    assert set(rep.per_tenant["acme"].outputs) == {r.rid for r in reqs}
+    assert rep.admission["n_shed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# RequestQueue priority/deadline semantics
+# ---------------------------------------------------------------------------
+
+
+def test_queue_pops_priority_then_fifo():
+    reqs = [Request("a", np.arange(3), 1, priority=0),
+            Request("b", np.arange(3), 1, priority=2),
+            Request("c", np.arange(3), 1, priority=2),
+            Request("d", np.arange(3), 1, priority=1)]
+    q = RequestQueue(reqs)
+    assert [q.pop_ready(0.0).rid for _ in range(4)] == ["b", "c", "d", "a"]
+
+
+def test_queue_requeue_goes_to_front_of_class():
+    reqs = [Request("a", np.arange(3), 1, priority=1),
+            Request("b", np.arange(3), 1, priority=1)]
+    q = RequestQueue(reqs)
+    first = q.pop_ready(0.0)
+    q.requeue(first)
+    assert q.pop_ready(0.0).rid == "a"  # deferred head stays the head
+
+
+def test_queue_overflow_evicts_lowest_priority_newest():
+    q = RequestQueue(max_pending=2)
+    assert q.push(Request("a", np.arange(3), 1, priority=1)) is None
+    assert q.push(Request("b", np.arange(3), 1, priority=0)) is None
+    shed = q.push(Request("c", np.arange(3), 1, priority=2))
+    assert shed is not None and shed.rid == "b"  # lowest priority loses
+    assert q.n_shed == 1
+    # an incoming request BELOW everything queued sheds itself
+    shed2 = q.push(Request("d", np.arange(3), 1, priority=-1))
+    assert shed2 is not None and shed2.rid == "d"
+    assert len(q) == 2
+
+
+def test_request_deadline_validation():
+    with pytest.raises(ValueError, match="deadline"):
+        Request("r", np.arange(3), 1, arrival=5.0, deadline=1.0)
+
+
+# ---------------------------------------------------------------------------
+# artifact validation + scoped metrics satellites
+# ---------------------------------------------------------------------------
+
+
+def test_load_artifact_rejects_wrong_arch(tmp_path, model):
+    cfg, spA, _ = model
+    root = str(tmp_path / "art")
+    DP.save_artifact(root, spA, cfg)
+    with pytest.raises(ValueError, match="expected.*found|arch"):
+        DP.load_artifact_tiers(root, arch="llama-7b")
+
+
+def test_load_artifact_rejects_wrong_tile(tmp_path):
+    qcfg = registry.get_smoke_config("yi-6b", dtype="float32",
+                                     cim_mode="qat")
+    params = registry.model_fns(qcfg).init_params(qcfg, jax.random.PRNGKey(0))
+    spc = DP.compress(qcfg, params, target_sparsity=0.0, tile=(16, 16),
+                      uniform=True)
+    root = str(tmp_path / "art")
+    DP.save_artifact(root, spc, qcfg)
+    meta = DP.load_artifact_extra(root)
+    assert meta["schema"] == DP.ARTIFACT_SCHEMA
+    assert meta["tiles"] == [[16, 16]]
+    with pytest.raises(ValueError, match=r"8.*8|tile"):
+        DP.load_artifact_tiers(root, tile=(8, 8))
+    # matching expectations load fine
+    sp2, _, _ = DP.load_artifact_tiers(root, arch=qcfg.name, tile=(16, 16))
+    assert sp2 is not None
+
+
+def test_validate_artifact_refuses_newer_schema(tmp_path, model):
+    cfg, spA, _ = model
+    root = str(tmp_path / "art")
+    DP.save_artifact(root, spA, cfg)
+    mpath = tmp_path / "art" / "step_00000000" / "manifest.json"
+    meta = json.loads(mpath.read_text())
+    meta["extra"]["schema"] = DP.ARTIFACT_SCHEMA + 1
+    mpath.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="schema"):
+        DP.load_artifact_tiers(root)
+
+
+def test_scoped_metrics_inject_tenant_label():
+    reg = MetricsRegistry()
+    sm = ScopedMetrics(reg, tenant="acme")
+    sm.counter("requests_finished").inc()
+    sm.counter("gateway_shed_total", reason="deadline").inc(2)
+    snap = reg.snapshot()
+    assert snap["counters"]["requests_finished{tenant=acme}"] == 1
+    assert snap["counters"][
+        "gateway_shed_total{reason=deadline,tenant=acme}"] == 2
+
+
+def test_gateway_reports_tenant_labeled_metrics(model):
+    cfg, spA, _ = model
+    reqs = _trace(cfg, "acme", n=2, seed=13, max_new=3)
+    reg = MetricsRegistry()
+    gw = Gateway([TenantRuntime("acme", cfg, spA)],
+                 GatewayConfig(n_slots=2, block_size=4, n_blocks=48),
+                 metrics=reg)
+    gw.run(reqs)
+    snap = reg.snapshot()
+    assert snap["counters"]["requests_finished{tenant=acme}"] == 2
+    assert snap["counters"]["decode_steps{tenant=acme}"] >= 1
